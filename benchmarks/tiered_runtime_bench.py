@@ -1,0 +1,106 @@
+"""Benchmarks for the TPU-adapted tiered-memory runtime (beyond-paper).
+
+  * tiered_kv: BBC near-tier hit-mass on Zipfian-attention decode streams,
+    modeled HBM-bytes saved by the sparse tiered mode, and migration counts —
+    the serving-side analogue of the paper's Fig 8.
+  * tiered_embedding: near-tier hit rate and modeled lookup-bytes saved on a
+    Zipfian token stream (the OS-exposed mechanism analogue).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiered_embedding as te
+from repro.core import tiered_kv as tkv
+
+
+def bench_tiered_kv(T=4096, page=128, near_pages=8, steps=64, seed=0):
+    """Drive a decode stream whose queries concentrate attention on a hot
+    page set (Zipfian, like real long-context serving); report near-tier
+    mass coverage + modeled byte savings of the sparse tiered mode."""
+    cfg = tkv.TieredKVConfig(page=page, near_pages=near_pages, interval=8,
+                             max_promotions=2)
+    B, Hkv, hd = 2, 2, 64
+    H = Hkv * 2
+    ks = jax.random.split(jax.random.key(seed), 3)
+    k_cache = jax.random.normal(ks[0], (B, T, Hkv, hd), jnp.float32) * 0.1
+    v_cache = jax.random.normal(ks[1], (B, T, Hkv, hd), jnp.float32) * 0.1
+    # hot pages: boost key alignment with a fixed query direction
+    n_pages = T // page
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_pages + 1)
+    popularity = ranks ** -1.5
+    popularity /= popularity.sum()
+    hot = rng.choice(n_pages, size=4, replace=False, p=popularity)
+    direction = jax.random.normal(ks[2], (Hkv, hd), jnp.float32)
+    k_np = np.array(k_cache)          # writable copy
+    for p in hot:
+        k_np[:, p * page:(p + 1) * page] += 0.8 * np.asarray(direction)
+    cache = tkv.init_tiered_cache(jnp.asarray(k_np), v_cache, cfg)
+
+    pos = jnp.asarray(T - 1, jnp.int32)
+    mass_in_near = []
+    for step in range(steps):
+        q = (jnp.tile(direction.reshape(1, Hkv, 1, hd), (B, 1, 2, 1))
+             .reshape(B, H, hd)
+             + 0.15 * jax.random.normal(jax.random.key(100 + step),
+                                        (B, H, hd)))
+        if step % cfg.interval == 0:
+            cache = tkv.plan_and_migrate(cache, q, pos, cfg)
+        masses = tkv.page_masses(q, cache, pos, cfg)       # (B, n_pages)
+        promoted = cache["slot_of_page"] >= 0
+        mass_in_near.append(float((masses * promoted).sum() / masses.sum()))
+
+    kv_bytes_full = 2 * T * Hkv * hd * 2                    # per seq, bf16
+    near_tokens = near_pages * page
+    kv_bytes_sparse = 2 * near_tokens * Hkv * hd * 2
+    rows = [
+        ("tiered_kv", "near_mass_coverage", round(float(np.mean(
+            mass_in_near[-16:])), 3)),
+        ("tiered_kv", "migrations", int(cache["migrations"])),
+        ("tiered_kv", "bytes_full_per_step", kv_bytes_full),
+        ("tiered_kv", "bytes_sparse_mode", kv_bytes_sparse),
+        ("tiered_kv", "sparse_bytes_saved_pct",
+         round(100 * (1 - kv_bytes_sparse / kv_bytes_full), 1)),
+    ]
+    return rows
+
+
+def bench_tiered_embedding(V=32000, D=1024, near_rows=1024, steps=30,
+                           batch_tokens=4096, alpha=1.1, seed=0):
+    cfg = te.TieredEmbeddingConfig(near_rows=near_rows, max_promotions=128)
+    table = jax.random.normal(jax.random.key(seed), (V, D), jnp.float32)
+    state = te.init_state(table, cfg)
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, V + 1)
+    p = ranks ** -alpha
+    p /= p.sum()
+    hit = 0.0
+    for _ in range(steps):
+        toks = jnp.asarray(rng.choice(V, size=batch_tokens, p=p), jnp.int32)
+        state = te.record_and_migrate(table, state, toks, cfg)
+    toks = jnp.asarray(rng.choice(V, size=batch_tokens, p=p), jnp.int32)
+    _, hits = te.lookup(table, state, toks)
+    hit = float(hits.mean())
+    # modeled bytes: near rows stream from VMEM-resident table (free at HBM),
+    # misses gather from HBM at gather-derated bandwidth.
+    bytes_all_hbm = batch_tokens * D * 4
+    bytes_tiered = int((1 - hit) * batch_tokens * D * 4)
+    return [
+        ("tiered_embed", "near_hit_rate", round(hit, 3)),
+        ("tiered_embed", "migrations", int(state["migrations"])),
+        ("tiered_embed", "hbm_bytes_baseline", bytes_all_hbm),
+        ("tiered_embed", "hbm_bytes_tiered", bytes_tiered),
+        ("tiered_embed", "bytes_saved_pct",
+         round(100 * (1 - bytes_tiered / bytes_all_hbm), 1)),
+    ]
+
+
+def run_all():
+    rows = bench_tiered_kv() + bench_tiered_embedding()
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

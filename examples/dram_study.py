@@ -1,0 +1,43 @@
+"""Reproduce the paper's core results in one run: Table 1, Fig 5 trends,
+Fig 8 (IPC/power, 1/2/4-core under BBC), and the Fig 9 capacity sweep.
+
+  PYTHONPATH=src python examples/dram_study.py [--quick]
+"""
+
+import argparse
+
+from benchmarks import paper_figures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+
+    print("== Table 1 (latency / power / die size) ==")
+    for r in paper_figures.table1_summary():
+        print(f"  {r[1]:10s} tRC={r[2]:6.1f}ns  power={r[3]:.2f}  area={r[4]:.2f}")
+    print("   paper:   short 23.1/0.51/3.76  long 52.5/1.00/1.00  "
+          "near 23.1/0.51/1.03  far 65.8/1.49/1.03")
+
+    print("\n== Fig 5: segment-length sweeps ==")
+    for r in paper_figures.fig5_segment_latency_sweep():
+        print(f"  {r[1]} len={r[2]:4d} tRCD={r[3]:6.2f} tRC={r[4]:6.2f}"
+              if False else f"  {r[0]} len={r[1]:4d} tRCD={r[2]:6.2f} tRC={r[3]:6.2f}")
+
+    n = 6000 if args.quick else 15000
+    print("\n== Fig 8: BBC vs commodity DRAM ==")
+    for r in paper_figures.fig8_perf_and_power(n_requests=n):
+        print(f"  {r[1]}: IPC {r[2]:+.1f}%  power {r[3]:+.1f}%  "
+              f"energy {r[4]:+.1f}%  near-hit {r[5]:.2f}")
+    print("   paper:   1-core +12.8% / 2-core +12.3% / 4-core +11.0% IPC; "
+          "power -23.6/-26.4/-28.6%")
+
+    print("\n== Fig 9: near-segment capacity sweep ==")
+    for r in paper_figures.fig9_capacity_sweep(n_requests=n):
+        print(f"  near_rows={r[1]:4d}: IPC {r[2]:+.1f}%")
+    print("   paper: peak at 32 rows, declining beyond")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Serve a reduced model with the TL-DRAM tiered KV cache.
+
+Prefill a batch of prompts, then decode while the BBC policy migrates hot KV
+pages into the near tier; prints per-interval near-tier attention-mass
+coverage and verifies the tiered path matches standard attention exactly.
+
+  PYTHONPATH=src python examples/serve_tiered_kv.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import InputShape
+from repro.configs.registry import ARCHS
+from repro.core import tiered_kv as tkv
+from repro.kernels import ref
+from repro.models import model_zoo, transformer
+
+
+def main():
+    arch = ARCHS["yi-9b"].reduced()
+    S, B, steps = 256, 2, 48
+    max_len = S + 64           # page-aligned cache (page=32)
+    shape = InputShape("serve", seq_len=S, global_batch=B, kind="prefill")
+    params = transformer.init_params(jax.random.key(0), arch)
+    batch = model_zoo.make_batch(arch, shape)
+
+    print(f"prefill {B}x{S} ({arch.name} reduced)...")
+    logits, cache = transformer.prefill(params, batch, arch, max_len=max_len)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+    # Wrap layer-0's KV in the tiered cache to demonstrate the read path
+    # (the full per-layer integration is exercised in tests/benchmarks).
+    cfg = tkv.TieredKVConfig(page=32, near_pages=4, interval=8)
+    tiered = tkv.init_tiered_cache(cache["k"][0], cache["v"][0], cfg)
+
+    decode = jax.jit(lambda p, c, b: transformer.decode_step(p, c, b, arch))
+    H = arch.n_heads
+    hd = arch.resolved_head_dim
+    for step in range(steps):
+        logits, cache = decode(params, cache, {"tokens": tok})
+        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        pos = cache["pos"]
+
+        q = jax.random.normal(jax.random.key(step), (B, H, hd)) * 0.3
+        tiered["far_k"] = cache["k"][0]
+        tiered["far_v"] = cache["v"][0]
+        if step % cfg.interval == 0:
+            tiered = tkv.plan_and_migrate(tiered, q, pos, cfg)
+            masses = tkv.page_masses(q, tiered, pos, cfg)
+            cov = float((masses * (tiered["slot_of_page"] >= 0)).sum()
+                        / max(float(masses.sum()), 1e-9))
+            out_t = tkv.tiered_attention(tiered, q, pos, cfg)
+            out_ref = ref.decode_attention_ref(
+                q[:, None], tiered["far_k"], tiered["far_v"],
+                jnp.full((B,), int(pos), jnp.int32))[:, 0]
+            err = float(jnp.max(jnp.abs(out_t - out_ref)))
+            print(f"step {step:3d} near-mass={cov:.3f} "
+                  f"migrations={int(tiered['migrations'])} "
+                  f"tiered-vs-exact max|err|={err:.2e}")
+    print("generated tokens (seq 0):",
+          np.asarray(tok)[0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,160 @@
+"""Architecture and input-shape configuration for the model zoo.
+
+Every assigned architecture is an ``ArchConfig``; every workload shape is an
+``InputShape``.  The (arch x shape) grid drives the smoke tests, the multi-pod
+dry-run, and the roofline table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int                 # expert FFN hidden size
+    n_shared_experts: int = 0     # always-on shared experts (DeepSeek-style)
+    capacity_factor: float = 1.25
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int
+    n_heads: int = 0              # SSD heads (0 => derived)
+    head_dim: int = 64
+    d_conv: int = 4
+    chunk: int = 256              # SSD chunk length
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                   # dense | moe | ssm | hybrid | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int                  # query heads (0 for attention-free)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0             # 0 => d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 10_000.0
+    mrope: bool = False           # multimodal rotary (Qwen2-VL)
+    sliding_window: int = 0       # 0 => full attention
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    frontend: str = ""            # '' | 'vision' | 'audio' (stubbed)
+    n_codebooks: int = 0          # audio: EnCodec codebooks
+    tie_embeddings: bool = False
+    mlp_gated: bool = True        # SwiGLU (True) vs 2-matrix GELU (False)
+    source: str = ""              # provenance note
+
+    # -- derived -------------------------------------------------------------
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run 500k-token contexts? (SSM state or SWA.)"""
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Analytical parameter count (embedding + blocks + head)."""
+        d, f, v, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        hd = self.resolved_head_dim
+        n = v * d                       # embedding
+        if not self.tie_embeddings:
+            n += v * d                  # lm head
+        per_layer = 2 * d               # norms
+        if self.n_heads:
+            per_layer += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+                + self.n_heads * hd * d
+            if self.qk_norm:
+                per_layer += 2 * hd
+        if self.ssm is not None:
+            s = self.ssm
+            d_inner = s.n_heads * s.head_dim
+            per_layer += d * (2 * d_inner + 2 * s.d_state + s.n_heads) \
+                + s.d_conv * (d_inner + 2 * s.d_state) + d_inner * d \
+                + 2 * s.n_heads + d_inner
+        if self.moe is not None:
+            m = self.moe
+            per_layer += d * m.n_experts  # router
+            per_layer += m.n_experts * 3 * d * m.d_expert
+            per_layer += m.n_shared_experts * 3 * d * m.d_expert
+        elif f:
+            per_layer += (3 if self.mlp_gated else 2) * d * f
+        return n + L * per_layer + d      # final norm
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: only routed experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        all_expert = self.n_layers * m.n_experts * 3 * self.d_model * m.d_expert
+        active_expert = self.n_layers * (m.top_k + m.n_shared_experts) \
+            * 3 * self.d_model * m.d_expert
+        return full - all_expert + active_expert
+
+    # -- reduced config for CPU smoke tests ----------------------------------
+
+    def reduced(self) -> "ArchConfig":
+        kw: dict = dict(
+            n_layers=2,
+            d_model=64,
+            d_ff=128 if self.d_ff else 0,
+            vocab=256,
+            head_dim=16,
+        )
+        if self.n_heads:
+            kw["n_heads"] = 4
+            kw["n_kv_heads"] = max(1, min(self.n_kv_heads, 2))
+        if self.moe is not None:
+            kw["moe"] = MoEConfig(n_experts=4, top_k=min(self.moe.top_k, 2),
+                                  d_expert=32,
+                                  n_shared_experts=self.moe.n_shared_experts)
+        if self.ssm is not None:
+            kw["ssm"] = SSMConfig(d_state=16, n_heads=4, head_dim=16, chunk=32)
+        if self.sliding_window:
+            kw["sliding_window"] = 16
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # 'train' | 'prefill' | 'decode'
+
+    def reduced(self) -> "InputShape":
+        return InputShape(self.name, seq_len=min(self.seq_len, 64),
+                          global_batch=min(self.global_batch, 2),
+                          kind=self.kind)
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(arch: ArchConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether an (arch, shape) cell runs; reason string when skipped."""
+    if shape.name == "long_500k" and not arch.sub_quadratic:
+        return False, "full attention is quadratic; 500k-token decode skipped"
+    return True, ""

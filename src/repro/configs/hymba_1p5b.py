@@ -1,0 +1,22 @@
+"""Hymba-1.5B: hybrid-head decoder — parallel attention + Mamba heads.
+
+[arXiv:2411.13676; hf] 32L d_model=1600 25H (GQA kv=5) d_ff=5504 vocab=32001,
+ssm_state=16.  Most attention layers use a sliding window (sub-quadratic),
+which is what qualifies the arch for the 500k-token decode shape.
+"""
+
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32_001,
+    sliding_window=1024,
+    ssm=SSMConfig(d_state=16, n_heads=25, head_dim=64),
+    source="arXiv:2411.13676; hf",
+)

@@ -1,0 +1,20 @@
+"""Kimi K2: trillion-parameter MoE decoder (paper-table config).
+
+[arXiv:2501.kimi2; unverified] 61L d_model=7168 64H (GQA kv=8) expert_ff=2048
+vocab=163840, MoE 384 experts top-8 (+1 shared expert).
+"""
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="kimi-k2-1t-a32b",
+    family="moe",
+    n_layers=61,
+    d_model=7168,
+    n_heads=64,
+    n_kv_heads=8,
+    d_ff=2048,
+    vocab=163_840,
+    moe=MoEConfig(n_experts=384, top_k=8, d_expert=2048, n_shared_experts=1),
+    source="arXiv:2501.kimi2 (paper table); unverified",
+)

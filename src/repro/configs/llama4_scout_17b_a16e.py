@@ -1,0 +1,20 @@
+"""Llama-4 Scout: 17B-active MoE with 16 experts, top-1 routing + shared expert.
+
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified] 48L d_model=5120 40H
+(GQA kv=8) d_ff=8192 vocab=202048, MoE 16e top-1, early fusion.
+"""
+
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab=202_048,
+    moe=MoEConfig(n_experts=16, top_k=1, d_expert=8192, n_shared_experts=1),
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+)

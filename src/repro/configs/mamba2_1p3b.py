@@ -1,0 +1,23 @@
+"""Mamba2-1.3B: attention-free SSD (state-space duality) decoder.
+
+[arXiv:2405.21060; unverified] 48L d_model=2048, d_inner=2*d_model, 64 SSD
+heads of dim 64, ssm_state=128, vocab=50280.  O(1) decode state: the TL-DRAM
+KV-tier mechanism is inapplicable (no KV cache exists) — see DESIGN.md
+§Arch-applicability.
+"""
+
+from repro.configs.base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,
+    n_kv_heads=0,
+    d_ff=0,
+    vocab=50_280,
+    ssm=SSMConfig(d_state=128, n_heads=64, head_dim=64),
+    tie_embeddings=True,
+    source="arXiv:2405.21060; unverified",
+)

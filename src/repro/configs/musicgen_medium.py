@@ -1,0 +1,23 @@
+"""MusicGen-medium: decoder-only LM over EnCodec audio tokens.
+
+[arXiv:2306.05284; hf] 48L d_model=1536 24H (GQA kv=24 == MHA) d_ff=6144
+vocab=2048 (per codebook), 4 codebooks with a delay pattern.  The EnCodec
+frontend is a stub: ``input_specs()`` provides precomputed frame embeddings.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_ff=6144,
+    vocab=2048,
+    n_codebooks=4,
+    frontend="audio",
+    mlp_gated=False,           # MusicGen uses a 2-matrix GELU FFN
+    source="arXiv:2306.05284; hf",
+)

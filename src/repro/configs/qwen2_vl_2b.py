@@ -1,0 +1,23 @@
+"""Qwen2-VL-2B: vision-language decoder backbone with M-RoPE.
+
+[arXiv:2409.12191; hf] 28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936.
+The vision frontend (dynamic-resolution ViT) is a stub: ``input_specs()``
+provides precomputed patch embeddings, per the assignment brief.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    d_ff=8960,
+    vocab=151_936,
+    mrope=True,
+    frontend="vision",
+    tie_embeddings=True,
+    source="arXiv:2409.12191; hf",
+)

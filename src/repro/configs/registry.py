@@ -1,0 +1,54 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+from repro.configs import (
+    deepseek_coder_33b,
+    hymba_1p5b,
+    kimi_k2_1t_a32b,
+    llama4_scout_17b_a16e,
+    mamba2_1p3b,
+    musicgen_medium,
+    qwen2_vl_2b,
+    qwen3_1p7b,
+    starcoder2_3b,
+    yi_9b,
+)
+from repro.configs.base import ArchConfig, InputShape, SHAPES, shape_applicable
+
+ARCHS: dict[str, ArchConfig] = {
+    c.name: c for c in (
+        kimi_k2_1t_a32b.CONFIG,
+        llama4_scout_17b_a16e.CONFIG,
+        hymba_1p5b.CONFIG,
+        qwen2_vl_2b.CONFIG,
+        mamba2_1p3b.CONFIG,
+        musicgen_medium.CONFIG,
+        deepseek_coder_33b.CONFIG,
+        yi_9b.CONFIG,
+        qwen3_1p7b.CONFIG,
+        starcoder2_3b.CONFIG,
+    )
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> InputShape:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def all_cells() -> list[tuple[ArchConfig, InputShape, bool, str]]:
+    """Every (arch x shape) cell with its applicability verdict."""
+    out = []
+    for arch in ARCHS.values():
+        for shape in SHAPES.values():
+            ok, why = shape_applicable(arch, shape)
+            out.append((arch, shape, ok, why))
+    return out

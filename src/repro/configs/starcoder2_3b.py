@@ -1,0 +1,20 @@
+"""StarCoder2-3B: dense code model with GQA and RoPE.
+
+[arXiv:2402.19173; hf] 30L d_model=3072 24H (GQA kv=2) d_ff=12288 vocab=49152.
+"""
+
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2-3b",
+    family="dense",
+    n_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=2,
+    d_ff=12_288,
+    vocab=49_152,
+    tie_embeddings=True,
+    mlp_gated=False,           # StarCoder2 uses a 2-matrix GELU FFN
+    source="arXiv:2402.19173; hf",
+)

@@ -1,0 +1,67 @@
+"""DRAM die-area / cost model.
+
+Each sense amplifier is ~100x the size of a cell [107], so the die area of a
+DRAM with ``n`` cells per bitline amortizes the sense-amp stripe over ``n``
+rows.  Normalized die size (Table 1 / Fig. 3 of the paper):
+
+    A(n) = a + b / n        a = cell array + periphery,  b = sense-amp stripe
+
+anchored at A(512) = 1.00 (commodity long bitline) and A(32) = 3.76
+(short-bitline latency-optimized part, e.g. RLDRAM).
+
+TL-DRAM keeps the long bitline's single sense-amp stripe and adds one
+isolation transistor per bitline: +3% die area per added tier boundary
+(paper: segmented = 1.03).
+"""
+
+from __future__ import annotations
+
+CELLS_PER_BITLINE_BASELINE = 512
+AREA_LONG = 1.00
+AREA_SHORT_32 = 3.76
+ISO_OVERHEAD_PER_TIER = 0.03
+
+# Solve a + b/512 = 1.00, a + b/32 = 3.76.
+_B = (AREA_SHORT_32 - AREA_LONG) / (1.0 / 32 - 1.0 / CELLS_PER_BITLINE_BASELINE)
+_A = AREA_LONG - _B / CELLS_PER_BITLINE_BASELINE
+
+
+def die_area_norm(cells_per_bitline: int) -> float:
+    """Normalized die area of an *unsegmented* DRAM (commodity-512 == 1.0)."""
+    if cells_per_bitline <= 0:
+        raise ValueError("cells_per_bitline must be positive")
+    return _A + _B / cells_per_bitline
+
+
+def tldram_area_norm(total_cells: int = CELLS_PER_BITLINE_BASELINE,
+                     tiers: int = 2) -> float:
+    """TL-DRAM die area: long-bitline cost plus iso-FET overhead per boundary."""
+    if tiers < 2:
+        raise ValueError("TL-DRAM needs at least 2 tiers")
+    return die_area_norm(total_cells) + ISO_OVERHEAD_PER_TIER * (tiers - 1)
+
+
+def cost_per_bit_norm(cells_per_bitline: int) -> float:
+    """Cost-per-bit tracks die area at fixed capacity."""
+    return die_area_norm(cells_per_bitline)
+
+
+def table1_area_norm() -> dict[str, float]:
+    """Reproduces the 'Normalized Die-Size (Cost)' row of Table 1."""
+    return {
+        "short_32": die_area_norm(32),
+        "long_512": die_area_norm(512),
+        "segmented": tldram_area_norm(512, tiers=2),
+    }
+
+
+def fig3_tradeoff(cells: tuple[int, ...] = (32, 64, 128, 256, 512)) -> dict[int, dict]:
+    """Fig. 3: latency vs die size for different cells-per-bitline choices."""
+    from repro.core import tldram  # local import: avoid cycle at module load
+
+    out = {}
+    for n in cells:
+        t = tldram.calibrated_timings("unsegmented", n)
+        out[n] = {"t_rcd_ns": t.t_rcd, "t_rc_ns": t.t_rc,
+                  "die_area_norm": die_area_norm(n)}
+    return out

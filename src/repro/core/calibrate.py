@@ -1,0 +1,73 @@
+"""One-shot calibration of the TL-DRAM timing model against the paper.
+
+Two stages (see the "Calibration layer" note in ``tldram.py``):
+
+1. Fit the affine map ``t_cal = a + b * t_ode`` per timing constraint from the
+   two unsegmented anchor designs (short-32, long-512), using Table 1 of the
+   paper for tRC and JEDEC DDR3 / RLDRAM-class values for tRCD and tRP.
+2. Bisect the isolation-transistor resistance ``r_iso`` so the *calibrated*
+   far-480 tRC reproduces Table 1's 65.8 ns.
+
+Run ``python -m repro.core.calibrate`` to regenerate the constants baked into
+``tldram.DEFAULT_CAL`` / ``CircuitParams.r_iso_ohm``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core import tldram
+
+
+def fit_affine(x0: float, y0: float, x1: float, y1: float) -> tuple[float, float]:
+    b = (y1 - y0) / (x1 - x0)
+    return y0 - b * x0, b
+
+
+def calibrate(verbose: bool = True) -> tuple[tldram.AffineCal, tldram.CircuitParams]:
+    p = tldram.CircuitParams()
+    short = tldram.timings("unsegmented", tldram.TABLE1_NEAR_CELLS, params=p)
+    long_ = tldram.timings("unsegmented", tldram.CELLS_PER_BITLINE, params=p)
+
+    a_rc, b_rc = fit_affine(short.t_rc, tldram.TABLE1_TRC_NS["short_32"],
+                            long_.t_rc, tldram.TABLE1_TRC_NS["long_512"])
+    a_rcd, b_rcd = fit_affine(short.t_rcd, tldram.TRCD_ANCHORS_NS["short_32"],
+                              long_.t_rcd, tldram.TRCD_ANCHORS_NS["long_512"])
+    a_rp, b_rp = fit_affine(short.t_rp, tldram.TRP_ANCHORS_NS["short_32"],
+                            long_.t_rp, tldram.TRP_ANCHORS_NS["long_512"])
+    cal = tldram.AffineCal(a_rcd=a_rcd, b_rcd=b_rcd, a_rc=a_rc, b_rc=b_rc,
+                           a_rp=a_rp, b_rp=b_rp)
+
+    # Solve r_iso so calibrated far-480 tRC = 65.8 ns (monotone increasing).
+    target = tldram.TABLE1_TRC_NS["far_480"]
+
+    def far_trc(r_iso: float) -> float:
+        q = dataclasses.replace(p, r_iso_ohm=r_iso)
+        return tldram.calibrated_timings(
+            "far", tldram.TABLE1_FAR_CELLS, tldram.TABLE1_NEAR_CELLS,
+            params=q, cal=cal).t_rc
+
+    lo, hi = math.log(10.0), math.log(10e6)
+    for _ in range(60):
+        mid = 0.5 * (lo + hi)
+        if far_trc(math.exp(mid)) > target:
+            hi = mid
+        else:
+            lo = mid
+    p = dataclasses.replace(p, r_iso_ohm=math.exp(0.5 * (lo + hi)))
+
+    if verbose:
+        print(f"AffineCal(a_rcd={cal.a_rcd:.6f}, b_rcd={cal.b_rcd:.6f}, "
+              f"a_rc={cal.a_rc:.6f}, b_rc={cal.b_rc:.6f}, "
+              f"a_rp={cal.a_rp:.6f}, b_rp={cal.b_rp:.6f})")
+        print(f"r_iso_ohm = {p.r_iso_ohm:.3f}")
+        for name, t in tldram.table1_model(p, cal=cal, calibrated=True).items():
+            print(f"{name:10s} tRCD={t.t_rcd:6.2f}  tRAS={t.t_ras:6.2f}  "
+                  f"tRP={t.t_rp:6.2f}  tRC={t.t_rc:6.2f}  "
+                  f"(target tRC {tldram.TABLE1_TRC_NS[name]})")
+    return cal, p
+
+
+if __name__ == "__main__":
+    calibrate()

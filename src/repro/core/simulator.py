@@ -1,0 +1,434 @@
+"""Event-driven DRAM system simulator (Ramulator-lite) with TL-DRAM support.
+
+Reproduces the evaluation methodology of the paper (Sec. 5): trace-driven
+cores with a limited run-ahead window (MLP) issue cache-line requests to a
+shared memory controller (FR-FCFS, open-row policy) over one channel and
+multiple banks; each bank's subarrays optionally carry a TL-DRAM near-segment
+cache managed by one of the policies in ``repro.core.policies``.
+
+Fidelity notes (deliberate simplifications, standard for lightweight sims):
+  * request-granular bank serialization (per-bank command pipelining is folded
+    into the tRCD/tRAS/tRP/tRC window arithmetic);
+  * single rank, no tFAW/tRRD; data-bus contention is modeled exactly;
+  * writes share the read column path plus a tWR write-recovery window;
+  * all-bank refresh every tREFI occupying tRFC.
+
+Inter-Segment Data Transfer (IST) follows the paper: it occupies the *bank*
+for tRC(far) + 4 ns but never the channel, so accesses to other banks proceed
+concurrently — asserted by ``tests/test_simulator.py``.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+from repro.core import power, timing
+from repro.core.policies import CacheState, Policy, PolicyCosts, make_policy
+
+CPU_GHZ = 3.2
+ISSUE_WIDTH = 4
+ROWS_PER_SUBARRAY = 512
+
+
+# --------------------------------------------------------------------------
+# Configuration
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DeviceConfig:
+    """One DRAM device model."""
+
+    kind: str                      # 'commodity' | 'short' | 'tldram'
+    near_rows: int = 32            # TL-DRAM near-segment rows per subarray
+    total_rows: int = ROWS_PER_SUBARRAY
+    policy: str = "BBC"            # TL-DRAM near-segment policy
+    banks: int = 8
+    subarrays_per_bank: int = 16
+
+    def addressable_rows(self) -> int:
+        """Rows exposed to the system per subarray (cache mode hides near)."""
+        if self.kind == "tldram":
+            return self.total_rows - self.near_rows
+        return self.total_rows
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    device: DeviceConfig
+    mlp: int = 8                   # max outstanding requests per core
+    refresh: bool = True
+    policy_decay_period: int = 16  # accesses between score decays per subarray
+
+
+# --------------------------------------------------------------------------
+# Workload traces
+# --------------------------------------------------------------------------
+
+@dataclass
+class Trace:
+    """Per-core memory trace.
+
+    gaps[i]   : non-memory instructions before request i
+    banks[i]  : bank index
+    subarrays[i], rows[i] : subarray / row-within-subarray (far address space)
+    writes[i] : bool
+    """
+
+    gaps: np.ndarray
+    banks: np.ndarray
+    subarrays: np.ndarray
+    rows: np.ndarray
+    writes: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+
+# --------------------------------------------------------------------------
+# Results
+# --------------------------------------------------------------------------
+
+@dataclass
+class CoreStats:
+    instructions: int = 0
+    requests: int = 0
+    run_ns: float = 0.0
+
+    @property
+    def ipc(self) -> float:
+        cycles = self.run_ns * CPU_GHZ
+        return self.instructions / cycles if cycles else 0.0
+
+
+@dataclass
+class SimResult:
+    cores: list[CoreStats]
+    near_hits: int = 0
+    far_accesses: int = 0
+    normal_accesses: int = 0
+    row_hits: int = 0
+    acts_by_class: dict = field(default_factory=dict)
+    migrations: int = 0
+    writebacks: int = 0
+    energy_nj: float = 0.0
+    run_ns: float = 0.0
+    total_read_latency_ns: float = 0.0
+    reads: int = 0
+
+    @property
+    def near_hit_rate(self) -> float:
+        tot = self.near_hits + self.far_accesses
+        return self.near_hits / tot if tot else 0.0
+
+    @property
+    def power_mw(self) -> float:
+        return self.energy_nj / self.run_ns * 1e3 if self.run_ns else 0.0
+
+    @property
+    def avg_read_latency_ns(self) -> float:
+        return self.total_read_latency_ns / self.reads if self.reads else 0.0
+
+    def weighted_speedup(self, alone: "list[SimResult]") -> float:
+        return sum(c.ipc / a.cores[0].ipc
+                   for c, a in zip(self.cores, alone))
+
+
+# --------------------------------------------------------------------------
+# Internal state
+# --------------------------------------------------------------------------
+
+@dataclass
+class _Bank:
+    queue: list = field(default_factory=list)     # pending request ids
+    busy: bool = False
+    open_key: tuple | None = None                 # (class, subarray, phys_row)
+    open_ts: timing.TimingSet | None = None       # timings of the open row
+    ready_col: float = 0.0
+    ready_pre: float = 0.0
+    ready_act: float = 0.0
+
+
+@dataclass
+class _Core:
+    trace: Trace
+    ptr: int = 0
+    clock_ns: float = 0.0                         # run-ahead frontier
+    outstanding: list = field(default_factory=list)  # FIFO of request ids
+    done: bool = False
+    stats: CoreStats = field(default_factory=CoreStats)
+
+
+class _Event:
+    ARRIVAL = 0
+    BANK_DONE = 1
+    REFRESH = 2
+
+
+class DRAMSystem:
+    """One simulation run: ``DRAMSystem(cfg, traces).run()``."""
+
+    def __init__(self, cfg: SimConfig, traces: list[Trace]):
+        self.cfg = cfg
+        dev = cfg.device
+        self.dev = dev
+        self.banks = [_Bank() for _ in range(dev.banks)]
+        self.channel_free = 0.0
+        self.result = SimResult(cores=[])
+        self.events: list = []
+        self._seq = 0
+
+        # Timing sets per access class.
+        if dev.kind == "commodity":
+            self.ts_normal = timing.ddr3_baseline(dev.total_rows)
+        elif dev.kind == "short":
+            self.ts_normal = timing.short_bitline(dev.near_rows)
+        elif dev.kind == "tldram":
+            self.ts_near, self.ts_far = timing.tldram_timings(
+                dev.near_rows, dev.total_rows)
+            self.ist_ns = timing.ist_duration_ns(self.ts_far)
+        else:
+            raise ValueError(dev.kind)
+
+        # Energies per access class.
+        far_cells = dev.total_rows - dev.near_rows
+        self.e_normal = power.unsegmented_access_energy(dev.total_rows)
+        self.e_short = power.unsegmented_access_energy(dev.near_rows)
+        self.e_near = power.near_access_energy(dev.near_rows)
+        self.e_far = power.far_access_energy(dev.near_rows, far_cells)
+        self.e_ist = power.ist_energy_nj(dev.near_rows, far_cells)
+
+        # TL-DRAM per-subarray cache state + one policy instance.
+        if dev.kind == "tldram":
+            costs = PolicyCosts(near_cost=self.ts_near.t_rc,
+                                far_cost=self.ts_far.t_rc,
+                                migrate_cost=self.ist_ns)
+            self.policy: Policy | None = make_policy(dev.policy, costs)
+            self.caches = {
+                (b, s): CacheState(capacity=dev.near_rows)
+                for b in range(dev.banks)
+                for s in range(dev.subarrays_per_bank)
+            }
+            self._accesses_since_decay = dict.fromkeys(self.caches, 0)
+        else:
+            self.policy = None
+            self.caches = {}
+
+        self.cores = [_Core(trace=t) for t in traces]
+        for c in self.cores:
+            c.stats.requests = len(c.trace)
+            c.stats.instructions = int(c.trace.gaps.sum()) + len(c.trace)
+        # Request bookkeeping: flat arrays indexed by (core, idx).
+        self.req_issue_ns: dict[tuple[int, int], float] = {}
+
+        if self.policy is not None and self.policy.name == "STATIC":
+            self._static_preload()
+
+    # -- static profiling (OS-exposed mechanism) ----------------------------
+
+    def _static_preload(self):
+        counts: dict[tuple, dict[int, int]] = {k: {} for k in self.caches}
+        for core in self.cores:
+            t = core.trace
+            for b, s, r in zip(t.banks, t.subarrays, t.rows):
+                d = counts[(int(b), int(s))]
+                d[int(r)] = d.get(int(r), 0) + 1
+        for key, st in self.caches.items():
+            self.policy.preload(st, counts[key])
+
+    # -- event plumbing -----------------------------------------------------
+
+    def _push(self, t: float, kind: int, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self.events, (t, self._seq, kind, payload))
+
+    # -- core model -----------------------------------------------------------
+
+    def _core_try_issue(self, ci: int, now: float) -> None:
+        core = self.cores[ci]
+        while (core.ptr < len(core.trace)
+               and len(core.outstanding) < self.cfg.mlp):
+            gap = float(core.trace.gaps[core.ptr])
+            issue = max(core.clock_ns + gap / ISSUE_WIDTH / CPU_GHZ, now)
+            core.clock_ns = issue
+            rid = (ci, core.ptr)
+            core.outstanding.append(rid)
+            core.ptr += 1
+            self.req_issue_ns[rid] = issue
+            self._push(issue, _Event.ARRIVAL, rid)
+
+    def _core_complete(self, ci: int, rid, now: float) -> None:
+        core = self.cores[ci]
+        # In-order window: the oldest outstanding request gates retirement.
+        core.outstanding.remove(rid)
+        core.clock_ns = max(core.clock_ns, now)
+        self._core_try_issue(ci, now)
+        if core.ptr >= len(core.trace) and not core.outstanding and not core.done:
+            core.done = True
+            core.stats.run_ns = core.clock_ns
+
+    # -- controller ------------------------------------------------------------
+
+    def _classify(self, rid) -> tuple[str, tuple, timing.TimingSet, CacheState | None]:
+        """Access class, open-row key, timings, cache state for a request."""
+        ci, idx = rid
+        t = self.cores[ci].trace
+        b, s, r = int(t.banks[idx]), int(t.subarrays[idx]), int(t.rows[idx])
+        if self.dev.kind == "commodity":
+            return "normal", ("row", s, r), self.ts_normal, None
+        if self.dev.kind == "short":
+            return "short", ("row", s, r), self.ts_normal, None
+        st = self.caches[(b, s)]
+        if st.hit(r):
+            return "near", ("near", s, st.lookup[r]), self.ts_near, st
+        return "far", ("far", s, r), self.ts_far, st
+
+    def _select(self, bank: _Bank) -> int:
+        """FR-FCFS: oldest row-hit first, else oldest (with an age cap the
+        row-hit preference cannot starve FCFS order beyond 16 requests)."""
+        if len(bank.queue) > 1 and bank.open_key is not None:
+            for pos, rid in enumerate(bank.queue[:16]):
+                if self._classify(rid)[1] == bank.open_key:
+                    bank.queue.pop(pos)
+                    return rid
+        return bank.queue.pop(0)
+
+    def _serve(self, bi: int, now: float) -> None:
+        bank = self.banks[bi]
+        if bank.busy or not bank.queue:
+            return
+        rid = self._select(bank)
+        bank.busy = True
+
+        cls, key, ts, st = self._classify(rid)
+        ci, idx = rid
+        trace = self.cores[ci].trace
+        is_write = bool(trace.writes[idx])
+
+        activated = bank.open_key != key
+        if not activated:
+            self.result.row_hits += 1
+            t_col = max(now, bank.ready_col)
+        else:
+            if bank.open_key is not None:
+                t_pre = max(now, bank.ready_pre)
+                t_act = max(t_pre + bank.open_ts.t_rp, bank.ready_act)
+            else:
+                t_act = max(now, bank.ready_act)
+            bank.open_key, bank.open_ts = key, ts
+            bank.ready_col = t_act + ts.t_rcd
+            bank.ready_pre = t_act + ts.t_ras
+            bank.ready_act = t_act + ts.t_rc  # earliest back-to-back ACT
+            t_col = bank.ready_col
+            self._account_activation(cls)
+
+        data_start = max(t_col + ts.t_cl, self.channel_free)
+        data_end = data_start + ts.t_bl
+        self.channel_free = data_end
+        if is_write:
+            bank.ready_pre = max(bank.ready_pre, data_end + ts.t_wr)
+            self.result.energy_nj += power.E_WRITE_NJ
+        else:
+            self.result.energy_nj += power.E_READ_NJ
+            self.result.total_read_latency_ns += data_end - self.req_issue_ns[rid]
+            self.result.reads += 1
+
+        # Policy hooks (TL-DRAM only).
+        busy_until = data_end
+        if st is not None:
+            b, s, r = (int(trace.banks[idx]), int(trace.subarrays[idx]),
+                       int(trace.rows[idx]))
+            in_near = cls == "near"
+            self.policy.on_access(st, r, data_end, is_write, in_near,
+                                  activated=activated)
+            keyc = (b, s)
+            self._accesses_since_decay[keyc] += 1
+            if self._accesses_since_decay[keyc] >= self.cfg.policy_decay_period:
+                self._accesses_since_decay[keyc] = 0
+                self.policy.decay_scores(st)
+            if cls == "near":
+                self.result.near_hits += 1
+            else:
+                self.result.far_accesses += 1
+                decision = self.policy.decide(st, r, data_end,
+                                              bank_idle=not bank.queue)
+                if decision.promote:
+                    cost = self.ist_ns
+                    self.result.migrations += 1
+                    self.result.energy_nj += self.e_ist
+                    if decision.victim_dirty:
+                        cost += self.ist_ns
+                        self.result.writebacks += 1
+                        self.result.energy_nj += self.e_ist
+                    # IST occupies the bank (not the channel) and ends with
+                    # the involved rows precharged.
+                    busy_until = max(busy_until, bank.ready_pre) + cost
+                    bank.open_key, bank.open_ts = None, None
+                    bank.ready_act = max(bank.ready_act, busy_until)
+                    self.policy.apply_promotion(st, r, decision)
+
+        self._push(busy_until, _Event.BANK_DONE, (bi, rid, data_end))
+
+    def _account_activation(self, cls: str) -> None:
+        e = {"normal": self.e_normal, "short": self.e_short,
+             "near": self.e_near, "far": self.e_far}[cls].act_pre_nj
+        self.result.energy_nj += e
+        acts = self.result.acts_by_class
+        acts[cls] = acts.get(cls, 0) + 1
+        if cls in ("normal", "short"):
+            self.result.normal_accesses += 1
+
+    # -- refresh -----------------------------------------------------------
+
+    def _refresh(self, now: float) -> None:
+        for bank in self.banks:
+            start = max(now, bank.ready_pre if bank.open_key else now,
+                        bank.ready_act)
+            bank.open_key, bank.open_ts = None, None
+            bank.ready_act = max(bank.ready_act, start + timing.T_RFC_NS)
+        # 64 ms retention / tREFI => 8192 REF commands refresh every row once.
+        total_rows = self.dev.banks * self.dev.subarrays_per_bank * self.dev.total_rows
+        self.result.energy_nj += (total_rows / 8192.0) * power.E_REFRESH_PER_ROW_NJ
+        self._push(now + timing.T_REFI_NS, _Event.REFRESH, None)
+
+    # -- main loop -----------------------------------------------------------
+
+    def run(self) -> SimResult:
+        for ci in range(len(self.cores)):
+            self._core_try_issue(ci, 0.0)
+        if self.cfg.refresh:
+            self._push(timing.T_REFI_NS, _Event.REFRESH, None)
+
+        while self.events:
+            t, _, kind, payload = heapq.heappop(self.events)
+            if kind == _Event.ARRIVAL:
+                rid = payload
+                ci, idx = rid
+                bi = int(self.cores[ci].trace.banks[idx])
+                self.banks[bi].queue.append(rid)
+                self._serve(bi, t)
+            elif kind == _Event.BANK_DONE:
+                bi, rid, data_end = payload
+                self.banks[bi].busy = False
+                self._core_complete(rid[0], rid, data_end)
+                self._serve(bi, t)
+            elif kind == _Event.REFRESH:
+                if any(not c.done for c in self.cores):
+                    self._refresh(t)
+
+        self.result.cores = [c.stats for c in self.cores]
+        self.result.run_ns = max((c.stats.run_ns for c in self.cores), default=0.0)
+        self.result.energy_nj += power.P_BACKGROUND_MW * 1e-3 * self.result.run_ns
+        return self.result
+
+
+def simulate(cfg: SimConfig, traces: list[Trace]) -> SimResult:
+    return DRAMSystem(cfg, traces).run()
+
+
+def simulate_alone(cfg: SimConfig, traces: list[Trace]) -> list[SimResult]:
+    """Each trace run alone (for weighted-speedup baselines)."""
+    return [DRAMSystem(cfg, [t]).run() for t in traces]

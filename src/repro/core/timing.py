@@ -1,0 +1,69 @@
+"""DRAM timing-constraint sets for the simulator, derived from the calibrated
+TL-DRAM circuit model (``repro.core.tldram``).
+
+All times in nanoseconds.  Column-path constants (tCL, tBL, tCCD) follow
+DDR3-1066 (1.875 ns clock, BL8) and are independent of the bitline split —
+TL-DRAM only changes the cell-array timings (tRCD/tRAS/tRP).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import tldram
+
+# Column path (DDR3-1066 7-7-7, BL8).
+T_CL_NS = 13.125
+T_BL_NS = 7.5
+T_CCD_NS = 7.5
+T_WR_NS = 15.0          # write recovery before PRE
+# Refresh (2Gb-class): one all-bank REF every tREFI, occupying tRFC.
+T_REFI_NS = 7800.0
+T_RFC_NS = 160.0
+
+# Inter-segment transfer: "additional 4ns over tRC" (paper Sec. 4).
+IST_EXTRA_NS = 4.0
+
+
+@dataclass(frozen=True)
+class TimingSet:
+    """Row timings for one access class."""
+
+    t_rcd: float
+    t_ras: float
+    t_rp: float
+    t_cl: float = T_CL_NS
+    t_bl: float = T_BL_NS
+    t_wr: float = T_WR_NS
+
+    @property
+    def t_rc(self) -> float:
+        return self.t_ras + self.t_rp
+
+
+def _from_model(t: tldram.SegmentTimings) -> TimingSet:
+    return TimingSet(t_rcd=t.t_rcd, t_ras=t.t_ras, t_rp=t.t_rp)
+
+
+def ddr3_baseline(cells: int = tldram.CELLS_PER_BITLINE) -> TimingSet:
+    """Commodity long-bitline DRAM (the paper's baseline)."""
+    return _from_model(tldram.calibrated_timings("unsegmented", cells))
+
+
+def short_bitline(cells: int = tldram.TABLE1_NEAR_CELLS) -> TimingSet:
+    """Latency-optimized short-bitline DRAM (RLDRAM-class reference)."""
+    return _from_model(tldram.calibrated_timings("unsegmented", cells))
+
+
+def tldram_timings(near_cells: int, total_cells: int = tldram.CELLS_PER_BITLINE,
+                   ) -> tuple[TimingSet, TimingSet]:
+    """(near, far) timing sets for a TL-DRAM split at ``near_cells``."""
+    far_cells = total_cells - near_cells
+    near = _from_model(tldram.calibrated_timings("near", near_cells, far_cells))
+    far = _from_model(tldram.calibrated_timings("far", far_cells, near_cells))
+    return near, far
+
+
+def ist_duration_ns(far: TimingSet) -> float:
+    """Inter-segment transfer occupancy: tRC(far) + 4 ns, channel-free."""
+    return far.t_rc + IST_EXTRA_NS

@@ -1,0 +1,443 @@
+"""Circuit-level TL-DRAM bitline model.
+
+Reproduces the latency analysis of Lee et al., "Tiered-Latency DRAM" (HPCA 2013
+/ cs.AR 2018 summary): a DRAM bitline is a distributed RC load on the sense
+amplifier; splitting it with an isolation transistor yields a *near* segment
+(low capacitance -> fast) and a *far* segment (charged through the isolation
+transistor's resistance -> slow).
+
+The model is a lumped-node ODE integrated with forward Euler (a tiny
+SPICE-alike).  Nodes:
+
+  v_n : near-segment bitline (the sense amplifier lives here)
+  v_f : far-segment bitline (only when the isolation transistor is ON)
+  v_c : the accessed cell's storage capacitor
+
+Activation of a cell storing '1' proceeds in two phases, matching Fig. 6 of
+the paper:
+
+  phase A (charge sharing): wordline on, sense amp off; the cell and bitline
+    equilibrate, developing the perturbation dV on the bitline.
+  phase B (sensing & amplification): the sense amp drives the bitline (and,
+    through the access transistor, the cell) toward V_DD.
+
+Timing-constraint definitions (Sec. 3 of the paper):
+
+  tRCD : ACTIVATE -> bitline reaches the *threshold* voltage 0.75*V_DD
+         (column access may begin).
+  tRAS : ACTIVATE -> every storage node is *restored* (>= RESTORED_FRAC*V_DD).
+  tRP  : PRECHARGE -> every bitline node back within PRECHARGE_TOL of V_DD/2.
+  tRC  = tRAS + tRP (row cycle).
+
+The default ``CircuitParams`` are calibrated (see ``calibrate.py``) so that the
+four Table-1 design points reproduce the paper's numbers:
+
+  short bitline,  32 cells : tRC = 23.1 ns
+  long  bitline, 512 cells : tRC = 52.5 ns
+  near segment,   32 cells : tRC = 23.1 ns   (far disconnected)
+  far  segment,  480 cells : tRC = 65.8 ns   (through the isolation FET)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+
+import numpy as np
+
+# Voltage landmarks (fractions of V_DD), per the paper's definitions.
+SENSE_THRESHOLD_FRAC = 0.75   # "threshold" state: column access allowed
+RESTORED_FRAC = 0.95          # "restored" state: charge fully replenished
+PRECHARGE_TOL_FRAC = 0.02     # bitline considered precharged within +/-2% of VDD/2
+
+# Reference design points from Table 1 of the paper.
+CELLS_PER_BITLINE = 512
+TABLE1_NEAR_CELLS = 32
+TABLE1_FAR_CELLS = 480
+TABLE1_TRC_NS = {
+    "short_32": 23.1,
+    "long_512": 52.5,
+    "near_32": 23.1,
+    "far_480": 65.8,
+}
+
+
+@dataclass(frozen=True)
+class CircuitParams:
+    """Lumped circuit parameters.
+
+    Baselines derived from the Rambus 55nm power model [107] and scaled device
+    characteristics [98]; the four *_ohm / c_bl_per_cell_f values are then
+    calibrated (``repro.core.calibrate``) against Table 1 of the paper.
+    """
+
+    vdd: float = 1.2                     # volts (DDR3 at 55nm)
+    c_cell_f: float = 24e-15             # cell storage capacitance (F)
+    c_bl_per_cell_f: float = 0.320e-15   # bitline parasitic per attached cell (F)
+    c_iso_junction_f: float = 0.80e-15   # junction cap the iso FET adds to the near segment
+    r_sense_ohm: float = 45.4e3          # sense-amp drive resistance
+    r_pre_ohm: float = 45.4e3            # precharge (equalizer) driver resistance
+    r_cell_ohm: float = 140.0e3          # cell access transistor on-resistance
+    r_iso_ohm: float = 21208.702         # isolation FET on-resistance (calibrated)
+    # Length-independent components (row decode + wordline rise, charge-sharing
+    # window before SA enable, precharge-driver turn-on).  Real tRC is strongly
+    # sublinear in bitline length (Table 1: 23.1ns @ 32 cells vs 52.5ns @ 512
+    # cells => ~21ns fixed floor); these carry that floor.
+    t_decode_ns: float = 4.0             # row decoder + wordline rise (fixed)
+    t_share_ns: float = 3.0              # charge-sharing window before SA enable
+    t_pre_fixed_ns: float = 4.0          # precharge driver turn-on (fixed)
+    dt_ns: float = 0.01                  # Euler step
+
+    def c_bl(self, cells: int) -> float:
+        """Parasitic capacitance of a bitline segment with ``cells`` cells."""
+        return cells * self.c_bl_per_cell_f
+
+
+@dataclass(frozen=True)
+class SegmentTimings:
+    """Timing constraints (ns) for one access class, plus the voltage traces."""
+
+    t_rcd: float
+    t_ras: float
+    t_rp: float
+
+    @property
+    def t_rc(self) -> float:
+        return self.t_ras + self.t_rp
+
+
+@dataclass(frozen=True)
+class BitlineWaveform:
+    """Voltage-vs-time traces, for reproducing Figs. 6 and 7."""
+
+    t_ns: np.ndarray
+    v_near: np.ndarray
+    v_far: np.ndarray | None   # None when the far segment is floating
+    v_cell: np.ndarray | None  # None for precharge (wordline closed)
+
+
+def _euler_activation(
+    p: CircuitParams,
+    c_near: float,
+    c_far: float | None,
+    cell_on_far: bool,
+    t_max_ns: float = 400.0,
+    dt_ns: float | None = None,
+) -> BitlineWaveform:
+    """Integrate the activation dynamics (charge sharing + amplification).
+
+    ``c_far is None`` means the isolation transistor is OFF (near-only access or
+    an unsegmented bitline, in which case ``c_near`` is the full bitline cap).
+    """
+    dt_ns = dt_ns if dt_ns is not None else p.dt_ns
+    dt = dt_ns * 1e-9
+    n_steps = int(t_max_ns / dt_ns)
+    t = np.arange(n_steps) * dt_ns
+
+    v_n = np.empty(n_steps)
+    v_c = np.empty(n_steps)
+    v_f = np.empty(n_steps) if c_far is not None else None
+
+    vn = 0.5 * p.vdd   # bitline precharged
+    vc = p.vdd         # cell stores '1'
+    vf = 0.5 * p.vdd
+
+    sa_on_step = int(p.t_share_ns / dt_ns)
+
+    for i in range(n_steps):
+        v_n[i] = vn
+        v_c[i] = vc
+        if v_f is not None:
+            v_f[i] = vf
+
+        i_sa = (p.vdd - vn) / p.r_sense_ohm if i >= sa_on_step else 0.0
+        if c_far is None:
+            # Near-only (or unsegmented): cell hangs off the near node.
+            i_cell = (vc - vn) / p.r_cell_ohm
+            dvn = (i_sa + i_cell) / c_near
+            dvc = ((vn - vc) / p.r_cell_ohm) / p.c_cell_f
+            vn += dvn * dt
+            vc += dvc * dt
+        else:
+            i_iso = (vf - vn) / p.r_iso_ohm
+            if cell_on_far:
+                i_cell_far = (vc - vf) / p.r_cell_ohm
+                dvn = (i_sa + i_iso) / c_near
+                dvf = (-i_iso + i_cell_far) / c_far
+                dvc = ((vf - vc) / p.r_cell_ohm) / p.c_cell_f
+            else:
+                i_cell_near = (vc - vn) / p.r_cell_ohm
+                dvn = (i_sa + i_iso + i_cell_near) / c_near
+                dvf = (-i_iso) / c_far
+                dvc = ((vn - vc) / p.r_cell_ohm) / p.c_cell_f
+            vn += dvn * dt
+            vf += dvf * dt
+            vc += dvc * dt
+
+    return BitlineWaveform(t_ns=t, v_near=v_n, v_far=v_f, v_cell=v_c)
+
+
+def _euler_precharge(
+    p: CircuitParams,
+    c_near: float,
+    c_far: float | None,
+    t_max_ns: float = 400.0,
+    dt_ns: float | None = None,
+) -> BitlineWaveform:
+    """Integrate the precharge dynamics (drive every bitline node to VDD/2)."""
+    dt_ns = dt_ns if dt_ns is not None else p.dt_ns
+    dt = dt_ns * 1e-9
+    n_steps = int(t_max_ns / dt_ns)
+    t = np.arange(n_steps) * dt_ns
+
+    v_n = np.empty(n_steps)
+    v_f = np.empty(n_steps) if c_far is not None else None
+
+    vn = p.vdd           # restored high after the access
+    vf = p.vdd
+    v_tgt = 0.5 * p.vdd
+
+    for i in range(n_steps):
+        v_n[i] = vn
+        if v_f is not None:
+            v_f[i] = vf
+        i_pre = (v_tgt - vn) / p.r_pre_ohm
+        if c_far is None:
+            vn += (i_pre / c_near) * dt
+        else:
+            i_iso = (vf - vn) / p.r_iso_ohm
+            vn += ((i_pre + i_iso) / c_near) * dt
+            vf += ((-i_iso) / c_far) * dt
+
+    return BitlineWaveform(t_ns=t, v_near=v_n, v_far=v_f, v_cell=None)
+
+
+def _first_crossing(t_ns: np.ndarray, v: np.ndarray, level: float) -> float:
+    idx = np.argmax(v >= level)
+    if v[idx] < level:
+        raise ValueError("voltage never reached target level; t_max too small")
+    return float(t_ns[idx])
+
+
+def _first_stays_above(t_ns: np.ndarray, v: np.ndarray, level: float) -> float:
+    """First time after which v stays >= level (handles the charge-sharing dip:
+    a cell storing '1' starts at VDD, dips while sharing, then restores)."""
+    below = v < level
+    if not below.any():
+        return 0.0
+    last_below = len(below) - 1 - np.argmax(below[::-1])
+    if last_below == len(below) - 1:
+        raise ValueError("voltage never restored; t_max too small")
+    return float(t_ns[last_below + 1])
+
+
+def _first_settled(t_ns: np.ndarray, v: np.ndarray, target: float, tol: float) -> float:
+    """First time after which |v - target| stays within tol forever."""
+    outside = np.abs(v - target) > tol
+    if not outside.any():
+        return 0.0
+    last_outside = len(outside) - 1 - np.argmax(outside[::-1])
+    if last_outside == len(outside) - 1:
+        raise ValueError("voltage never settled; t_max too small")
+    return float(t_ns[last_outside + 1])
+
+
+class BitlineModel:
+    """Computes TL-DRAM timing constraints for arbitrary segment lengths."""
+
+    def __init__(self, params: CircuitParams | None = None):
+        self.p = params or CircuitParams()
+
+    # -- access classes ----------------------------------------------------
+
+    def unsegmented(self, cells: int) -> SegmentTimings:
+        """A conventional bitline with ``cells`` cells (no isolation FET)."""
+        c = self.p.c_bl(cells)
+        return self._solve(c_near=c, c_far=None, cell_on_far=False)
+
+    def near(self, near_cells: int, far_cells: int | None = None) -> SegmentTimings:
+        """Accessing a near-segment cell: isolation FET OFF, far floating.
+
+        The far segment is electrically invisible apart from the iso FET's
+        junction capacitance, so the latency matches a short bitline of
+        ``near_cells`` cells (paper Sec. 3).
+        """
+        del far_cells  # disconnected: does not load the near segment
+        c = self.p.c_bl(near_cells) + self.p.c_iso_junction_f
+        return self._solve(c_near=c, c_far=None, cell_on_far=False)
+
+    def far(self, near_cells: int, far_cells: int) -> SegmentTimings:
+        """Accessing a far-segment cell: isolation FET ON (acts as a resistor)."""
+        c_n = self.p.c_bl(near_cells) + self.p.c_iso_junction_f
+        c_f = self.p.c_bl(far_cells)
+        return self._solve(c_near=c_n, c_far=c_f, cell_on_far=True)
+
+    def _solve(self, c_near: float, c_far: float | None,
+               cell_on_far: bool) -> SegmentTimings:
+        t_max = 100.0
+        while True:
+            # Scale dt with the window so the step count stays bounded; never
+            # coarser than needed to resolve the fixed-overhead windows.
+            dt = max(self.p.dt_ns, t_max / 40_000.0)
+            try:
+                act = _euler_activation(self.p, c_near=c_near, c_far=c_far,
+                                        cell_on_far=cell_on_far, t_max_ns=t_max,
+                                        dt_ns=dt)
+                pre = _euler_precharge(self.p, c_near=c_near, c_far=c_far,
+                                       t_max_ns=t_max, dt_ns=dt)
+                return self._timings(act, pre)
+            except ValueError:
+                t_max *= 4.0
+                if t_max > 2.0e6:
+                    raise
+
+    # -- waveforms for Figs. 6/7 -------------------------------------------
+
+    def activation_waveform(self, near_cells: int, far_cells: int | None,
+                            access_far: bool) -> BitlineWaveform:
+        if far_cells is None or not access_far:
+            cells = near_cells if far_cells is not None else near_cells
+            c = self.p.c_bl(cells) + (self.p.c_iso_junction_f if far_cells is not None else 0.0)
+            return _euler_activation(self.p, c_near=c, c_far=None, cell_on_far=False)
+        c_n = self.p.c_bl(near_cells) + self.p.c_iso_junction_f
+        return _euler_activation(self.p, c_near=c_n, c_far=self.p.c_bl(far_cells),
+                                 cell_on_far=True)
+
+    # -- internals -----------------------------------------------------------
+
+    def _timings(self, act: BitlineWaveform, pre: BitlineWaveform) -> SegmentTimings:
+        p = self.p
+        thr = SENSE_THRESHOLD_FRAC * p.vdd
+        restored = RESTORED_FRAC * p.vdd
+        tol = PRECHARGE_TOL_FRAC * p.vdd
+        v_half = 0.5 * p.vdd
+
+        t_rcd = p.t_decode_ns + _first_crossing(act.t_ns, act.v_near, thr)
+
+        # restored: every storage/bitline node back at VDD (cell is the slowest;
+        # for far accesses the far bitline must also be restored).  The cell
+        # starts at VDD and dips during charge sharing -> use "stays above".
+        t_restore = _first_stays_above(act.t_ns, act.v_cell, restored)
+        if act.v_far is not None:
+            t_restore = max(t_restore, _first_stays_above(act.t_ns, act.v_far, restored))
+        t_ras = p.t_decode_ns + t_restore
+
+        t_rp = p.t_pre_fixed_ns + _first_settled(pre.t_ns, pre.v_near, v_half, tol)
+        if pre.v_far is not None:
+            t_rp = max(t_rp, p.t_pre_fixed_ns +
+                       _first_settled(pre.t_ns, pre.v_far, v_half, tol))
+        return SegmentTimings(t_rcd=t_rcd, t_ras=t_ras, t_rp=t_rp)
+
+
+@functools.lru_cache(maxsize=512)
+def _cached_timings(kind: str, a: int, b: int, params: CircuitParams) -> SegmentTimings:
+    m = BitlineModel(params)
+    if kind == "unsegmented":
+        return m.unsegmented(a)
+    if kind == "near":
+        return m.near(a, b)
+    if kind == "far":
+        # `a` is the far-segment length, `b` the near-segment length.
+        return m.far(near_cells=b, far_cells=a)
+    raise ValueError(kind)
+
+
+def timings(kind: str, cells: int, other_cells: int = 0,
+            params: CircuitParams | None = None) -> SegmentTimings:
+    """Cached convenience wrapper.
+
+    kind='unsegmented': ``cells`` on one bitline.
+    kind='near':  near segment of ``cells`` (far = ``other_cells``, floating).
+    kind='far':   far segment of ``cells`` behind a near segment of ``other_cells``.
+    """
+    return _cached_timings(kind, cells, other_cells, params or CircuitParams())
+
+
+# ---------------------------------------------------------------------------
+# Calibration layer.
+#
+# The lumped-RC ODE reproduces the circuit *dynamics* (waveform shapes, the
+# direction and relative size of every trend in Figs. 5-7), but a 3-node lumped
+# model cannot also reproduce DRAM's large length-independent latency floor
+# (regenerative SA latching, wordline RC trees, driver turn-on) without a
+# full distributed model.  Following standard practice, the absolute timings
+# are an affine map of the ODE solution, anchored to published values:
+#
+#   tRC  : Table 1 of the paper  (short-32 = 23.1 ns, long-512 = 52.5 ns)
+#   tRCD : JEDEC DDR3-1066 7-7-7 (long-512 = 13.75 ns) and an RLDRAM-class
+#          short-bitline part    (short-32 =  8.0 ns)
+#   tRP  : DDR3 (13.125 ns) / short-bitline (7.0 ns)
+#
+# r_iso is then solved so the calibrated far-480 tRC hits Table 1's 65.8 ns.
+# The affine coefficients below are produced by ``repro.core.calibrate``.
+# ---------------------------------------------------------------------------
+
+TRCD_ANCHORS_NS = {"short_32": 8.0, "long_512": 13.75}
+TRP_ANCHORS_NS = {"short_32": 7.0, "long_512": 13.125}
+
+
+@dataclass(frozen=True)
+class AffineCal:
+    """Affine calibration ``t_cal = a + b * t_ode`` per timing constraint."""
+
+    a_rcd: float
+    b_rcd: float
+    a_rc: float
+    b_rc: float
+    a_rp: float
+    b_rp: float
+
+
+# Baked by `python -m repro.core.calibrate` (see that module).
+DEFAULT_CAL: AffineCal = AffineCal(
+    a_rcd=3.154494, b_rcd=0.922953,
+    a_rc=10.109985, b_rc=0.733899,
+    a_rp=5.501504, b_rp=0.272950,
+)
+
+
+def calibrated_timings(kind: str, cells: int, other_cells: int = 0,
+                       params: CircuitParams | None = None,
+                       cal: AffineCal | None = None) -> SegmentTimings:
+    """ODE timings passed through the Table-1-anchored affine calibration."""
+    cal = cal or DEFAULT_CAL
+    if cal is None:
+        raise RuntimeError("no calibration constants available")
+    raw = timings(kind, cells, other_cells, params=params)
+    t_rcd = cal.a_rcd + cal.b_rcd * raw.t_rcd
+    t_rc = cal.a_rc + cal.b_rc * raw.t_rc
+    t_rp = cal.a_rp + cal.b_rp * raw.t_rp
+    return SegmentTimings(t_rcd=t_rcd, t_ras=t_rc - t_rp, t_rp=t_rp)
+
+
+def table1_model(params: CircuitParams | None = None,
+                 cal: AffineCal | None = None,
+                 calibrated: bool = False) -> dict[str, SegmentTimings]:
+    """The four Table-1 design points (raw ODE or calibrated)."""
+    fn = (lambda k, c, o: calibrated_timings(k, c, o, params=params, cal=cal)) \
+        if calibrated else (lambda k, c, o: timings(k, c, o, params=params))
+    return {
+        "short_32": fn("unsegmented", TABLE1_NEAR_CELLS, 0),
+        "long_512": fn("unsegmented", CELLS_PER_BITLINE, 0),
+        "near_32": fn("near", TABLE1_NEAR_CELLS, TABLE1_FAR_CELLS),
+        "far_480": fn("far", TABLE1_FAR_CELLS, TABLE1_NEAR_CELLS),
+    }
+
+
+def segment_length_sweep(
+    near_lengths: tuple[int, ...] = (16, 32, 64, 128, 256),
+    total_cells: int = CELLS_PER_BITLINE,
+    params: CircuitParams | None = None,
+    calibrated: bool = True,
+) -> dict[str, dict[int, SegmentTimings]]:
+    """Fig. 5: near/far latencies as a function of the split point."""
+    fn = (lambda k, c, o: calibrated_timings(k, c, o, params=params)) if calibrated \
+        else (lambda k, c, o: timings(k, c, o, params=params))
+    near = {n: fn("near", n, total_cells - n) for n in near_lengths}
+    far = {total_cells - n: fn("far", total_cells - n, n) for n in near_lengths}
+    return {"near": near, "far": far}
+
+
+def with_params(**overrides) -> CircuitParams:
+    return dataclasses.replace(CircuitParams(), **overrides)

@@ -1,0 +1,138 @@
+"""Synthetic workload trace generation for the DRAM simulator.
+
+The paper evaluates with SPEC CPU2006 traces (not redistributable).  We
+generate calibrated synthetic mixes with the properties that drive the
+TL-DRAM result: Zipfian row popularity (a small hot set of rows dominates),
+row-buffer burst locality, and a range of memory intensities (MPKI).
+
+Workload classes (named after the paper's benchmark behaviour classes):
+
+  hot      : memory-intensive, highly skewed row reuse   (caching-friendly)
+  stream   : memory-intensive, sequential row sweeps     (low reuse)
+  mixed    : moderate intensity, skewed + streaming blend
+  uniform  : memory-intensive, uniform random rows       (caching-adverse)
+  light    : low memory intensity (compute-bound)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.simulator import Trace
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    name: str
+    n_requests: int = 30_000
+    mpki: float = 25.0               # memory requests per kilo-instruction
+    zipf_alpha: float = 1.3          # row-popularity skew (0 => uniform)
+    working_set_rows: int = 1024     # distinct rows touched
+    burst_geo_p: float = 0.35        # P(end burst): row-buffer burst locality
+    stream_frac: float = 0.0         # fraction of requests from a row sweep
+    write_frac: float = 0.30
+    banks: int = 8
+    subarrays: int = 16
+    rows_per_subarray: int = 480     # TL-DRAM far address space
+    # OS page allocation clusters spatially: the working set concentrates in
+    # a few (bank, subarray) regions, so per-subarray near capacity binds.
+    subarrays_used: int = 20         # of banks*subarrays total regions
+
+
+CLASSES: dict[str, WorkloadSpec] = {
+    # SPEC-memory-intensive-like: strong row reuse at the 10k-cycle scale
+    # (Zipfian hot set) but modest row-buffer *burst* locality (row-hit
+    # rates around 40-60%, as measured for SPEC CPU2006).
+    "hot": WorkloadSpec("hot", mpki=30.0, zipf_alpha=1.6,
+                        working_set_rows=768, burst_geo_p=0.70),
+    "hot2": WorkloadSpec("hot2", mpki=22.0, zipf_alpha=1.8,
+                         working_set_rows=512, burst_geo_p=0.65),
+    "mixed": WorkloadSpec("mixed", mpki=15.0, zipf_alpha=1.4,
+                          working_set_rows=1024, burst_geo_p=0.65,
+                          stream_frac=0.10),
+    "light": WorkloadSpec("light", mpki=8.0, zipf_alpha=1.6,
+                          working_set_rows=512, burst_geo_p=0.65),
+    # Fig-9 class: flatter popularity and a bigger hot set, so near-segment
+    # *capacity* binds (the capacity-vs-latency trade-off of the sweep).
+    "capacity": WorkloadSpec("capacity", mpki=25.0, zipf_alpha=1.05,
+                             working_set_rows=2048, burst_geo_p=0.65,
+                             subarrays_used=16),
+    # Adversarial tails (low reuse): TL-DRAM gains little / loses here.
+    "stream": WorkloadSpec("stream", mpki=28.0, zipf_alpha=0.4,
+                           working_set_rows=4096, burst_geo_p=0.45,
+                           stream_frac=0.8),
+    "uniform": WorkloadSpec("uniform", mpki=25.0, zipf_alpha=0.0,
+                            working_set_rows=8192, burst_geo_p=0.6),
+}
+
+# The paper's multiprogrammed mixes draw from all behaviour classes.
+DEFAULT_MIX = ("hot", "mixed", "hot", "stream")
+
+
+def _zipf_rows(rng: np.ndarray, spec: WorkloadSpec, n: int) -> np.ndarray:
+    """Sample row *identities* (0..working_set-1) with Zipfian popularity."""
+    ws = spec.working_set_rows
+    if spec.zipf_alpha <= 0.0:
+        return rng.integers(0, ws, size=n)
+    ranks = np.arange(1, ws + 1, dtype=np.float64)
+    p = ranks ** (-spec.zipf_alpha)
+    p /= p.sum()
+    return rng.choice(ws, size=n, p=p)
+
+
+def generate(spec: WorkloadSpec, seed: int = 0) -> Trace:
+    rng = np.random.default_rng(seed)
+    n = spec.n_requests
+
+    # --- row identity stream: bursts of the same row (row-buffer locality),
+    # with a streaming component sweeping rows sequentially.
+    n_bursts = max(1, int(n * spec.burst_geo_p))
+    burst_rows = _zipf_rows(rng, spec, n_bursts)
+    burst_lens = rng.geometric(spec.burst_geo_p, size=n_bursts)
+    rows_ws = np.repeat(burst_rows, burst_lens)[:n]
+    if len(rows_ws) < n:
+        extra = _zipf_rows(rng, spec, n - len(rows_ws))
+        rows_ws = np.concatenate([rows_ws, extra])
+
+    if spec.stream_frac > 0:
+        n_stream = int(n * spec.stream_frac)
+        idx = np.sort(rng.choice(n, size=n_stream, replace=False))
+        rows_ws[idx] = (np.arange(n_stream) // 4) % spec.working_set_rows
+
+    # --- map working-set row identity -> (bank, subarray, row).  A fixed
+    # random layout per workload, clustered into ``subarrays_used`` regions
+    # (page-coloring-like spatial locality).
+    ws = spec.working_set_rows
+    n_regions = spec.banks * spec.subarrays
+    used = rng.choice(n_regions, size=min(spec.subarrays_used, n_regions),
+                      replace=False)
+    region_of_row = used[rng.integers(0, len(used), size=ws)]
+    row_in_region = rng.integers(0, spec.rows_per_subarray, size=ws)
+    flat_region = region_of_row[rows_ws]
+    banks = flat_region % spec.banks
+    subarrays = flat_region // spec.banks
+    rows = row_in_region[rows_ws]
+
+    # --- instruction gaps from MPKI: mean gap = 1000/MPKI non-mem instrs.
+    mean_gap = max(1.0, 1000.0 / spec.mpki - 1.0)
+    gaps = rng.exponential(mean_gap, size=n).astype(np.int64)
+
+    writes = rng.random(n) < spec.write_frac
+
+    return Trace(gaps=gaps, banks=banks.astype(np.int64),
+                 subarrays=subarrays.astype(np.int64),
+                 rows=rows.astype(np.int64), writes=writes)
+
+
+def make_mix(names: tuple[str, ...] = DEFAULT_MIX, n_requests: int | None = None,
+             seed: int = 0) -> list[Trace]:
+    """A multiprogrammed workload: one trace per core."""
+    out = []
+    for i, name in enumerate(names):
+        spec = CLASSES[name]
+        if n_requests is not None:
+            spec = WorkloadSpec(**{**spec.__dict__, "n_requests": n_requests})
+        out.append(generate(spec, seed=seed * 1000 + i))
+    return out

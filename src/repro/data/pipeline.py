@@ -1,0 +1,99 @@
+"""Deterministic, resumable, sharded synthetic LM data pipeline.
+
+Production properties the trainer depends on:
+  * deterministic: batch i is a pure function of (seed, step) — any worker
+    can recompute any batch (no data-loss on restart);
+  * resumable: the iterator state is just the step counter, checkpointed
+    alongside params;
+  * sharded: each data-parallel rank materializes only its slice
+    (host-sharded loading; the dry-run feeds global ShapeDtypeStructs).
+
+The token stream is a mixture of Zipfian unigrams with Markov bigram
+structure, so losses actually *decrease* under training (unlike uniform
+noise) and the tiered-embedding near tier sees realistic skew.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import model_zoo
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 1234
+    zipf_alpha: float = 1.1
+    bigram_weight: float = 0.5    # how much of the next-token dist is bigram
+
+
+class SyntheticLM:
+    """Batch i == f(seed, i); shard-aware."""
+
+    def __init__(self, arch: ArchConfig, shape: InputShape,
+                 cfg: DataConfig = DataConfig(),
+                 rank: int = 0, world: int = 1):
+        self.arch = arch
+        self.shape = shape
+        self.cfg = cfg
+        self.rank = rank
+        self.world = world
+        assert shape.global_batch % world == 0
+        self.local_batch = shape.global_batch // world
+        v = arch.vocab
+        rng = np.random.default_rng(cfg.seed)
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        self.unigram = ranks ** (-cfg.zipf_alpha)
+        self.unigram /= self.unigram.sum()
+        # sparse "bigram" structure: each token has a preferred successor
+        self.successor = rng.permutation(v)
+
+    def batch(self, step: int) -> dict:
+        """Materialize this rank's slice of global batch ``step``."""
+        B, S = self.local_batch, self.shape.seq_len
+        out_tokens = np.empty((B, S + 1), np.int32)
+        for b in range(B):
+            global_idx = step * self.shape.global_batch \
+                + self.rank * B + b
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.cfg.seed, global_idx]))
+            toks = rng.choice(self.arch.vocab, size=S + 1, p=self.unigram)
+            # inject bigram transitions
+            follow = rng.random(S) < self.cfg.bigram_weight
+            nxt = self.successor[toks[:-1]]
+            toks[1:] = np.where(follow, nxt, toks[1:])
+            out_tokens[b] = toks
+        batch = {"tokens": out_tokens[:, :-1],
+                 "labels": out_tokens[:, 1:].astype(np.int32)}
+        if self.arch.family == "vlm":
+            n_patch = model_zoo.n_patches(S)
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.cfg.seed, 7, step, self.rank]))
+            batch["patch_embeds"] = rng.standard_normal(
+                (B, n_patch, self.arch.d_model)).astype(np.float32) * 0.02
+            pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None, :, None],
+                                  (B, S, 3))
+            batch["positions"] = np.ascontiguousarray(pos)
+        if self.arch.family == "audio":
+            rng = np.random.default_rng(
+                np.random.SeedSequence([self.cfg.seed, 8, step, self.rank]))
+            batch["frame_embeds"] = rng.standard_normal(
+                (B, S, self.arch.d_model)).astype(np.float32) * 0.02
+            batch["labels"] = rng.integers(
+                0, self.arch.vocab, size=(B, S, self.arch.n_codebooks),
+                dtype=np.int32)
+            del batch["tokens"]
+        return batch
+
+    # -- iterator protocol with explicit, checkpointable state ---------------
+
+    def state(self, step: int) -> dict:
+        return {"step": step, "seed": self.cfg.seed,
+                "rank": self.rank, "world": self.world}
+
+    @staticmethod
+    def restore_step(state: dict) -> int:
+        return int(state["step"])

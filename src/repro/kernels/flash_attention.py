@@ -1,0 +1,94 @@
+"""Pallas TPU flash-attention forward kernel (causal, GQA, optional window).
+
+Grid: (batch, q_heads, S / block_q).  Per step, one (block_q, hd) query tile
+and this head's full (T, hd) K/V panels are resident in VMEM; the kernel
+streams K/V in (block_kv, hd) sub-tiles with the online-softmax recurrence.
+MXU alignment: block_q and block_kv are multiples of 128 when the shape
+allows, hd is the lane dimension.
+
+VMEM budget per step (bf16): (2*T + block_q)*hd*2B + O(block_q*block_kv*4B)
+— e.g. T=4096, hd=128, block_q=block_kv=128: ~2.2 MB, comfortably inside the
+~16 MB/core VMEM of TPU v5e.  For longer sequences the model uses the jnp
+scan formulation (`repro.models.layers.flash_attention`); this kernel is the
+hot-path for training blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q: int, block_kv: int,
+                  seq_k: int, causal: bool, window: int, scale: float):
+    qi = pl.program_id(2)
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale          # (bq, hd)
+    bq, hd = q.shape
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    n_kv = seq_k // block_kv
+
+    def body(i, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.ds(i * block_kv, block_kv), 0, :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(i * block_kv, block_kv), 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bkv)
+        k_pos = i * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_kv), 1)
+        mask = jnp.ones((bq, block_kv), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        l_new = l * alpha + p.sum(axis=1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        return acc_new, m_new, l_new
+
+    acc = jnp.zeros((bq, hd), jnp.float32)
+    m = jnp.full((bq, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((bq, 1), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_kv, body, (acc, m, l))
+    out = acc / jnp.maximum(l, 1e-30)
+    o_ref[0, :, 0, :] = out.astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_kv: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q: (B,S,H,hd); k,v: (B,S,Hkv,hd) (self-attention, T == S)."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, S)
+    assert S % block_q == 0 and S % block_kv == 0, (S, block_q, block_kv)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_kv=block_kv, seq_k=S,
+        causal=causal, window=window, scale=hd ** -0.5)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, S // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((1, S, 1, hd), lambda b, h, i: (b, 0, h // g, 0)),
+            pl.BlockSpec((1, S, 1, hd), lambda b, h, i: (b, 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd),
+                               lambda b, h, i: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

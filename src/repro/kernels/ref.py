@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are validated against
+(``tests/test_kernels_*.py`` sweep shapes/dtypes and assert_allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, window: int = 0) -> jax.Array:
+    """Materialized softmax attention.  q: (B,S,H,hd); k,v: (B,T,Hkv,hd)."""
+    B, S, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= qpos + (T - S) >= kpos     # aligned to the sequence end
+    if window:
+        mask &= qpos + (T - S) - kpos < window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         length: jax.Array) -> jax.Array:
+    """Single-token decode attention with a live-prefix mask.
+
+    q: (B,1,H,hd); k,v: (B,T,Hkv,hd); length: (B,) valid prefix per sequence.
+    """
+    B, _, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    live = jnp.arange(T)[None, :] < length[:, None]          # (B,T)
+    scores = jnp.where(live[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bthd->bshd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def decode_attention_stats_ref(q, k, v, length):
+    """Like decode_attention_ref but returns (unnormalized_out, m, l) online-
+    softmax statistics, for two-tier merging."""
+    B, _, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    k = jnp.repeat(k, g, axis=2)
+    v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k).astype(jnp.float32)[:, :, 0]
+    scores = scores * (hd ** -0.5)                           # (B,H,T)
+    live = jnp.arange(T)[None, None, :] < length[:, None, None]
+    scores = jnp.where(live, scores, NEG_INF)
+    m = scores.max(axis=-1)                                  # (B,H)
+    p = jnp.exp(scores - m[..., None]) * live
+    l = p.sum(axis=-1)                                       # (B,H)
+    out = jnp.einsum("bht,bthd->bhd", p.astype(v.dtype), v)  # unnormalized
+    return out.astype(jnp.float32), m, l
+
+
+def merge_attention_stats(parts):
+    """Log-sum-exp merge of (out, m, l) partial attention results."""
+    outs, ms, ls = zip(*parts)
+    m = jnp.stack(ms).max(axis=0)
+    total_out = sum(o * jnp.exp(mi - m)[..., None] for o, mi in zip(outs, ms))
+    total_l = sum(li * jnp.exp(mi - m) for li, mi in zip(ls, ms))
+    return total_out / jnp.maximum(total_l, 1e-30)[..., None]
+
+
+def tiered_gather_ref(near_table: jax.Array, near_slots: jax.Array,
+                      far_values: jax.Array) -> jax.Array:
+    """out[t] = near_table[near_slots[t]] if near_slots[t] >= 0 else far_values[t].
+
+    near_table: (C,D); near_slots: (T,) int32 (-1 => far); far_values: (T,D).
+    """
+    gathered = jnp.take(near_table, jnp.maximum(near_slots, 0), axis=0)
+    return jnp.where((near_slots >= 0)[:, None], gathered, far_values)
+
+
+def ssd_chunk_scan_ref(states: jax.Array, decays: jax.Array,
+                       h0: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Inter-chunk SSD state recurrence.
+
+    states: (nc,H,P,N) per-chunk accumulated inputs; decays: (nc,H) chunk-level
+    decay; h0: (H,P,N).  Returns (h_prev (nc,H,P,N) — state *entering* each
+    chunk — and the final state).
+    """
+    def body(h, inp):
+        st, dec = inp
+        return h * dec[:, None, None] + st, h
+
+    h_final, h_prev = jax.lax.scan(body, h0, (states, decays))
+    return h_prev, h_final

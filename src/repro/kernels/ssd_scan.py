@@ -1,0 +1,65 @@
+"""Pallas kernel: SSD inter-chunk state recurrence (Mamba-2).
+
+The sequential part of the chunked SSD algorithm: carry the (H, P, N) state
+across chunks, emitting the state *entering* each chunk.  The parallel
+intra-chunk math stays in XLA (it is MXU-friendly einsums); this kernel owns
+the serial chain, keeping the state resident in VMEM across the whole scan
+instead of round-tripping HBM once per chunk.
+
+Grid: (batch, H / block_h).  VMEM per step: (nc + 2) x block_h x P x N f32
+tiles — e.g. nc=16 chunks, block_h=8, P=64, N=128: ~4.5 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_scan_kernel(states_ref, decays_ref, h0_ref, hprev_ref, hfinal_ref, *,
+                     n_chunks: int):
+    h = h0_ref[0].astype(jnp.float32)                  # (bh, P, N)
+
+    def body(c, h):
+        hprev_ref[0, c] = h
+        dec = decays_ref[0, c]                          # (bh,)
+        st = states_ref[0, c].astype(jnp.float32)       # (bh, P, N)
+        return h * dec[:, None, None] + st
+
+    h = jax.lax.fori_loop(0, n_chunks, body, h)
+    hfinal_ref[0] = h
+
+
+def ssd_chunk_scan(states: jax.Array, decays: jax.Array, h0: jax.Array,
+                   block_h: int = 8, interpret: bool = False):
+    """states: (B,nc,H,P,N); decays: (B,nc,H); h0: (B,H,P,N) — all f32.
+
+    Returns (h_prev (B,nc,H,P,N), h_final (B,H,P,N)).
+    """
+    B, nc, H, P, N = states.shape
+    block_h = min(block_h, H)
+    assert H % block_h == 0, (H, block_h)
+
+    kernel = functools.partial(_ssd_scan_kernel, n_chunks=nc)
+    h_prev, h_final = pl.pallas_call(
+        kernel,
+        grid=(B, H // block_h),
+        in_specs=[
+            pl.BlockSpec((1, nc, block_h, P, N), lambda b, h: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, nc, block_h), lambda b, h: (b, 0, h)),
+            pl.BlockSpec((1, block_h, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, nc, block_h, P, N), lambda b, h: (b, 0, h, 0, 0)),
+            pl.BlockSpec((1, block_h, P, N), lambda b, h: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(states, decays, h0)
+    return h_prev, h_final

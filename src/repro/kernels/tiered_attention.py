@@ -1,0 +1,102 @@
+"""Pallas decode-attention kernel over the TL-DRAM-style *near tier*.
+
+The TPU adaptation of the paper's near segment: hot KV pages live in a small
+*contiguous* buffer (near tier) that this kernel streams HBM->VMEM with dense
+BlockSpec tiles — sequential DMA at full bandwidth, the TPU analogue of the
+short bitline's low latency.  Cold pages stay in the paged far tier and are
+attended by the XLA gather path; the two partial results are merged with the
+standard log-sum-exp composition (``ops.tiered_decode_attention``).
+
+The kernel returns *unnormalized* (out, m, l) online-softmax statistics so
+the merge is exact.
+
+Grid: (batch, kv_heads).  Per step: this head's query group (g, hd) and the
+near-tier panel (T_near, hd) are VMEM-resident; K/V stream in block_kv tiles.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _near_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, *,
+                        block_kv: int, t_near: int, scale: float):
+    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale           # (g, hd)
+    g, hd = q.shape
+    length = len_ref[0]                                          # scalar int32
+
+    n_kv = t_near // block_kv
+
+    def body(i, carry):
+        acc, m, l = carry
+        k = k_ref[0, pl.ds(i * block_kv, block_kv), 0, :].astype(jnp.float32)
+        v = v_ref[0, pl.ds(i * block_kv, block_kv), 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (g, bkv)
+        slot = i * block_kv + jax.lax.broadcasted_iota(jnp.int32, (1, block_kv), 1)
+        s = jnp.where(slot < length, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(slot < length, p, 0.0)
+        l_new = l * alpha + p.sum(axis=1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        return acc_new, m_new, l_new
+
+    acc = jnp.zeros((g, hd), jnp.float32)
+    m = jnp.full((g, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((g, 1), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, n_kv, body, (acc, m, l))
+    o_ref[0, 0, :, :] = acc
+    m_ref[0, 0, :] = m[:, 0]
+    l_ref[0, 0, :] = l[:, 0]
+
+
+def near_decode_attention(q: jax.Array, k_near: jax.Array, v_near: jax.Array,
+                          near_len: jax.Array, block_kv: int = 128,
+                          interpret: bool = False):
+    """Flash-decode over the contiguous near tier.
+
+    q: (B, H, hd) single-token queries; k_near/v_near: (B, T_near, Hkv, hd);
+    near_len: (B,) int32 — live entries per sequence.
+
+    Returns (out (B,H,hd) f32 unnormalized, m (B,H) f32, l (B,H) f32).
+    """
+    B, H, hd = q.shape
+    T, Hkv = k_near.shape[1], k_near.shape[2]
+    g = H // Hkv
+    block_kv = min(block_kv, T)
+    while T % block_kv:          # shrink to a divisor of the near length
+        block_kv //= 2
+    q4 = q.reshape(B, Hkv, g, hd)
+
+    kernel = functools.partial(_near_decode_kernel, block_kv=block_kv,
+                               t_near=T, scale=hd ** -0.5)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, T, 1, hd), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1, T, 1, hd), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((1,), lambda b, h: (b,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q4, k_near, v_near, near_len)
+    return (out.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H))

@@ -1,0 +1,61 @@
+"""Pallas kernel: two-tier embedding-row gather (TL-DRAM near segment).
+
+The near table (hot vocabulary rows, selected by the shared BBC policy) is
+small enough to pin in VMEM — the TPU analogue of the near segment.  The
+kernel resolves each token against the near tier with per-row dynamic VMEM
+loads; tokens that miss take their pre-gathered far-tier row (the slow HBM
+gather path, produced by XLA outside the kernel).
+
+Grid: (T / block_t,).  VMEM per step: the full near table (C x D) plus one
+(block_t x D) far panel — e.g. C=1024, D=2048 bf16 => 4 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tiered_gather_kernel(slots_ref, near_ref, far_ref, o_ref, *,
+                          block_t: int):
+    def body(i, _):
+        slot = slots_ref[i]
+        near_row = near_ref[pl.ds(jnp.maximum(slot, 0), 1), :][0]
+        far_row = far_ref[i, :]
+        row = jnp.where(slot >= 0, near_row.astype(far_row.dtype), far_row)
+        o_ref[i, :] = row
+        return 0
+
+    jax.lax.fori_loop(0, block_t, body, 0)
+
+
+def tiered_gather(near_table: jax.Array, near_slots: jax.Array,
+                  far_values: jax.Array, block_t: int = 256,
+                  interpret: bool = False) -> jax.Array:
+    """near_table: (C,D); near_slots: (T,) int32 (-1 => far); far_values: (T,D)."""
+    T, D = far_values.shape
+    C = near_table.shape[0]
+    block_t = min(block_t, T)
+    pad = (-T) % block_t
+    if pad:
+        near_slots = jnp.pad(near_slots, (0, pad), constant_values=-1)
+        far_values = jnp.pad(far_values, ((0, pad), (0, 0)))
+    Tp = T + pad
+
+    kernel = functools.partial(_tiered_gather_kernel, block_t=block_t)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Tp // block_t,),
+        in_specs=[
+            pl.BlockSpec((block_t,), lambda i: (i,)),
+            pl.BlockSpec((C, D), lambda i: (0, 0)),
+            pl.BlockSpec((block_t, D), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_t, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Tp, D), far_values.dtype),
+        interpret=interpret,
+    )(near_slots, near_table, far_values)
+    return out[:T]

@@ -1,0 +1,291 @@
+"""HLO-text analysis: FLOPs, HBM traffic, and collective wire bytes with
+correct while-loop accounting.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop *body once*, which
+under-reports every scan-over-layers model by ~L.  This module re-derives the
+three roofline inputs from the HLO text itself:
+
+  * computations parse into blocks with a per-computation symbol table
+    (instruction name -> shape), so dot contracting dims resolve even though
+    operand shapes are not printed inline;
+  * ``while`` ops multiply their body's totals by the trip count from the
+    instruction's ``backend_config known_trip_count`` (emitted by XLA for
+    scan loops), falling back to the loop-condition constant;
+  * FLOPs: 2 * |out| * prod(contracting dims) per dot/convolution, plus
+    1 flop/element for elementwise fusions (minor, counted for honesty);
+  * HBM traffic: operand + result bytes at fusion/dot/data-movement
+    boundaries of the post-fusion HLO;
+  * collective wire bytes per device with ring-algorithm factors:
+      all-reduce          2 (n-1)/n * payload
+      all-gather          (n-1)/n * payload      (payload = gathered output)
+      reduce-scatter      (n-1)   * payload      (payload = scattered shard)
+      all-to-all          (n-1)/n * payload
+      collective-permute  1       * payload
+
+Validated against analytic 6ND in tests/test_hlo_analysis.py.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|\w+\[[\d,]*\]\S*))\s+"
+    r"([\w\-]+)\(([^)]*)\)(.*)$")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_LHS_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_BDIMS_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# HBM-traffic boundaries.  The CPU backend's HLO barely fuses elementwise
+# chains, so counting every op's operands would overstate TPU traffic ~10x.
+# We count the *structural* ops a TPU cannot fuse away — matmul operands and
+# results, data movement, reductions, collectives — i.e. a perfect-fusion
+# lower bound on HBM bytes (stated with the §Roofline tables).
+_TRAFFIC_OPS = {
+    "dot", "convolution", "copy", "transpose", "gather", "scatter",
+    "dynamic-slice", "dynamic-update-slice", "concatenate", "pad", "slice",
+    "reduce", "sort", "reverse", "custom-call",
+} | set(COLLECTIVE_KINDS) | {k + "-start" for k in COLLECTIVE_KINDS}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_dims(shape_str: str) -> list[int]:
+    m = _SHAPE_RE.search(shape_str)
+    if not m:
+        return []
+    return [int(x) for x in m.group(2).split(",") if x]
+
+
+def _shape_elems(shape_str: str) -> int:
+    n = 1
+    for d in _shape_dims(shape_str):
+        n *= d
+    return max(n, 1)
+
+
+@dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    operands: list[str]
+    tail: str
+    line: str
+
+
+@dataclass
+class CompStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_wire: float = 0.0
+    coll_by_kind: dict = field(default_factory=lambda: defaultdict(
+        lambda: [0, 0.0, 0.0]))
+    calls: list = field(default_factory=list)  # (callee, 'while', trip)
+    text: list = field(default_factory=list)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    if "source_target_pairs=" in line:
+        return 2
+    return 1
+
+
+def _parse_instr(line: str) -> _Instr | None:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, shape, op, opnds, tail = m.groups()
+    return _Instr(name=name, shape=shape, op=op,
+                  operands=_OPERAND_RE.findall(opnds), tail=tail, line=line)
+
+
+def _parse_computations(hlo: str):
+    comps: dict[str, CompStats] = {}
+    instrs: dict[str, list[_Instr]] = {}
+    entry = None
+    cur = None
+    for raw in hlo.splitlines():
+        stripped = raw.strip()
+        if stripped.endswith("{") and "(" in stripped and \
+                "=" not in stripped.split("(", 1)[0]:
+            name = stripped.split("(")[0].replace("ENTRY", "").strip() \
+                .lstrip("%")
+            cur = name
+            comps[cur] = CompStats()
+            instrs[cur] = []
+            if stripped.startswith("ENTRY"):
+                entry = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        comps[cur].text.append(stripped)
+        inst = _parse_instr(stripped)
+        if inst is not None:
+            instrs[cur].append(inst)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    return comps, instrs, entry
+
+
+def _accumulate(st: CompStats, insts: list[_Instr],
+                cond_texts: dict[str, list[str]]) -> None:
+    symbols = {i.name: i.shape for i in insts}
+    for i in insts:
+        op = i.op
+        if op == "while":
+            trip = 1
+            m = _TRIP_RE.search(i.line)
+            if m:
+                trip = int(m.group(1))
+            body = re.search(r"body=%?([\w.\-]+)", i.line)
+            cond = re.search(r"condition=%?([\w.\-]+)", i.line)
+            if trip == 1 and cond and cond.group(1) in cond_texts:
+                for tline in cond_texts[cond.group(1)]:
+                    if "compare" in tline:
+                        for c in _CONST_RE.findall(tline):
+                            trip = max(trip, int(c))
+            if body:
+                st.calls.append((body.group(1), "while", trip))
+            continue
+
+        out_bytes = _shape_bytes(i.shape)
+        operand_bytes = sum(_shape_bytes(symbols.get(o, ""))
+                            for o in i.operands)
+
+        if op in ("dot", "convolution"):
+            out_elems = _shape_elems(i.shape)
+            k = 1
+            cm = _LHS_CDIMS_RE.search(i.line)
+            if cm and i.operands:
+                lhs_dims = _shape_dims(symbols.get(i.operands[0], ""))
+                for ci in cm.group(1).split(","):
+                    if ci and int(ci) < len(lhs_dims):
+                        k *= lhs_dims[int(ci)]
+            st.flops += 2.0 * out_elems * k
+        elif op == "fusion":
+            st.flops += float(_shape_elems(i.shape))
+
+        if op in _TRAFFIC_OPS:
+            if op == "dynamic-update-slice":
+                # in-place on TPU: traffic = the update slice (read+write),
+                # not the whole aliased buffer
+                upd = (_shape_bytes(symbols.get(i.operands[1], ""))
+                       if len(i.operands) > 1 else out_bytes)
+                st.bytes += 2 * upd
+            elif op in ("gather", "dynamic-slice"):
+                # reads only the gathered/sliced rows (+ writes the result)
+                st.bytes += 2 * out_bytes
+            else:
+                st.bytes += out_bytes + operand_bytes
+
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVE_KINDS and not op.endswith("-done"):
+            payload = out_bytes
+            n = _group_size(i.line)
+            if base == "all-reduce":
+                wire = 2.0 * (n - 1) / max(n, 1) * payload
+            elif base == "all-gather":
+                wire = (n - 1) / max(n, 1) * payload
+            elif base == "reduce-scatter":
+                wire = (n - 1) * payload
+            elif base == "all-to-all":
+                wire = (n - 1) / max(n, 1) * payload
+            else:
+                wire = payload
+            rec = st.coll_by_kind[base]
+            rec[0] += 1
+            rec[1] += payload
+            rec[2] += wire
+            st.coll_wire += wire
+
+
+@dataclass
+class ModuleStats:
+    flops: float
+    bytes: float
+    coll_wire_bytes: float
+    coll_by_kind: dict
+    trip_counts: dict
+
+    def as_dict(self):
+        return {
+            "flops": self.flops, "bytes": self.bytes,
+            "collective_wire_bytes": self.coll_wire_bytes,
+            "collectives_by_kind": {
+                k: dict(count=v[0], payload_bytes=v[1], wire_bytes=v[2])
+                for k, v in self.coll_by_kind.items()},
+            "while_trip_counts": self.trip_counts,
+        }
+
+
+def analyze_module(hlo: str) -> ModuleStats:
+    comps, instrs, entry = _parse_computations(hlo)
+    cond_texts = {name: c.text for name, c in comps.items()}
+    for name, st in comps.items():
+        _accumulate(st, instrs[name], cond_texts)
+
+    trip_counts: dict[str, int] = {}
+    memo: dict[str, tuple] = {}
+
+    def total(name: str, stack=()):
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return (0.0, 0.0, 0.0, {})
+        st = comps[name]
+        f, b, w = st.flops, st.bytes, st.coll_wire
+        kinds = {k: list(v) for k, v in st.coll_by_kind.items()}
+        for callee, _, trip in st.calls:
+            cf, cb, cw, ck = total(callee, stack + (name,))
+            trip_counts[callee] = trip
+            f += cf * trip
+            b += cb * trip
+            w += cw * trip
+            for k, v in ck.items():
+                rec = kinds.setdefault(k, [0, 0.0, 0.0])
+                rec[0] += v[0] * trip
+                rec[1] += v[1] * trip
+                rec[2] += v[2] * trip
+        memo[name] = (f, b, w, kinds)
+        return memo[name]
+
+    f, b, w, kinds = total(entry)
+    return ModuleStats(flops=f, bytes=b, coll_wire_bytes=w,
+                       coll_by_kind=kinds, trip_counts=trip_counts)

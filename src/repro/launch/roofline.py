@@ -1,0 +1,143 @@
+"""Roofline analysis over the dry-run artifacts.
+
+Per (arch x shape x mesh) cell, from the compiled per-device SPMD module:
+
+  compute term    = HLO_FLOPs / peak_FLOPs            (197 TF/s bf16, v5e)
+  memory term     = HLO_bytes / HBM_bw                (819 GB/s)
+  collective term = wire_bytes_per_device / link_bw   (50 GB/s/link ICI)
+
+(The per-device HLO already divides by the chip count, so the brief's
+"/ chips" is implicit.)  MODEL_FLOPS uses the 6*N_active*D convention for
+training and 2*N_active*D for inference steps; the ratio MODEL/HLO flags
+remat/redundancy waste.  The roofline fraction reported in §Perf is
+
+  fraction = ideal_time / bound_time
+  ideal_time = MODEL_FLOPS_per_device / peak
+  bound_time = max(compute, memory, collective)
+
+Usage: python -m repro.launch.roofline [--dir artifacts/dryrun] [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+from repro.configs.registry import ARCHS, SHAPES
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+@dataclass
+class CellRoofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    model_flops_dev: float
+    hlo_flops_dev: float
+    temp_gb: float
+
+    @property
+    def bound(self) -> str:
+        t = {"compute": self.compute_s, "memory": self.memory_s,
+             "collective": self.collective_s}
+        return max(t, key=t.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        return self.model_flops_dev / self.hlo_flops_dev \
+            if self.hlo_flops_dev else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        ideal = self.model_flops_dev / PEAK_FLOPS
+        return ideal / self.bound_s if self.bound_s else 0.0
+
+
+def model_flops_per_device(arch_name: str, shape_name: str,
+                           n_devices: int) -> float:
+    arch = ARCHS[arch_name]
+    shape = SHAPES[shape_name]
+    n = arch.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens / n_devices
+    tokens = shape.global_batch           # one new token per sequence
+    return 2.0 * n * tokens / n_devices
+
+
+def load_cells(art_dir: Path, mesh: str = "single") -> list[CellRoofline]:
+    cells = []
+    for path in sorted(art_dir.glob("*.json")):
+        art = json.loads(path.read_text())
+        if art.get("status") != "ok" or art.get("mesh") != mesh:
+            continue
+        if "__" in path.stem and len(path.stem.split("__")) > 3:
+            continue  # tagged experiment artifacts are not baseline cells
+        h = art["hlo"]
+        cells.append(CellRoofline(
+            arch=art["arch"], shape=art["shape"], mesh=art["mesh"],
+            compute_s=h["flops"] / PEAK_FLOPS,
+            memory_s=h["bytes"] / HBM_BW,
+            collective_s=h["collective_wire_bytes"] / LINK_BW,
+            model_flops_dev=model_flops_per_device(
+                art["arch"], art["shape"], art["n_devices"]),
+            hlo_flops_dev=h["flops"],
+            temp_gb=art["memory"]["temp_bytes"] / 1e9,
+        ))
+    return cells
+
+
+def render_table(cells: list[CellRoofline]) -> str:
+    header = ("| arch | shape | compute (ms) | memory (ms) | collective (ms) "
+              "| bound | 6ND/HLO | roofline frac | temp GB |\n"
+              "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in sorted(cells, key=lambda c: (c.arch, c.shape)):
+        rows.append(
+            f"| {c.arch} | {c.shape} | {c.compute_s*1e3:.2f} "
+            f"| {c.memory_s*1e3:.2f} | {c.collective_s*1e3:.2f} "
+            f"| **{c.bound}** | {c.useful_ratio:.2f} "
+            f"| {c.roofline_fraction:.3f} | {c.temp_gb:.1f} |")
+    return header + "\n".join(rows) + "\n"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="artifacts/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json-out", default="artifacts/roofline.json")
+    args = ap.parse_args(argv)
+    cells = load_cells(Path(args.dir), args.mesh)
+    print(render_table(cells))
+    Path(args.json_out).parent.mkdir(parents=True, exist_ok=True)
+    Path(args.json_out).write_text(json.dumps(
+        [c.__dict__ | {"bound": c.bound, "useful_ratio": c.useful_ratio,
+                       "roofline_fraction": c.roofline_fraction}
+         for c in cells], indent=1))
+    worst = sorted(cells, key=lambda c: c.roofline_fraction)[:5]
+    print("\nworst roofline fractions:")
+    for c in worst:
+        print(f"  {c.arch} {c.shape}: {c.roofline_fraction:.3f} ({c.bound})")
+    coll = sorted(cells, key=lambda c: -c.collective_s)[:5]
+    print("most collective-bound:")
+    for c in coll:
+        print(f"  {c.arch} {c.shape}: collective {c.collective_s*1e3:.2f} ms")
+
+
+if __name__ == "__main__":
+    main()

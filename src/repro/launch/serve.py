@@ -1,0 +1,160 @@
+"""Serving step factories: prefill and decode (standard or tiered KV).
+
+``make_prefill_step`` / ``make_decode_step`` are the units the dry-run lowers
+for the ``prefill_*`` / ``decode_*`` / ``long_*`` shapes.  The tiered decode
+path threads the TL-DRAM near/far KV cache through every layer's attention.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import transformer
+
+
+def make_prefill_step(arch: ArchConfig, max_len: int):
+    def prefill_step(params, batch):
+        return transformer.prefill(params, batch, arch, max_len=max_len)
+    return prefill_step
+
+
+def make_decode_step(arch: ArchConfig):
+    def decode_step(params, cache, batch):
+        return transformer.decode_step(params, cache, batch, arch)
+    return decode_step
+
+
+def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,
+                                   page: int = 128, window: int = 1024):
+    """TL-DRAM sparse serving mode: each step attends the near tier — a
+    *materialized* contiguous buffer of BBC-selected hot pages — plus the
+    recent window (a contiguous slice of the far cache), instead of the full
+    far cache.  HBM reads drop from O(T) to O(near + window) per layer.
+
+    The near buffer is maintained by the runtime BBC between steps via pure
+    on-device page copies (``core.tiered_kv.plan_and_migrate`` — the IST
+    analogue); the decode step only *reads* it.  An earlier iteration
+    gathered pages on the fly inside the step: with the time axis
+    model-sharded, GSPMD turned the dynamic page gather into per-layer
+    all-gathers of the whole cache (bytes 5.3x WORSE than baseline,
+    EXPERIMENTS.md §Perf cell C iter 1) — materializing the near tier is
+    what makes the paper's design work on TPU too.
+
+    Exactness holds for all attention mass inside (near U window); the
+    benchmark measures the residual mass (bench_tiered_kv: coverage >0.95
+    under Zipfian attention).  Valid for steady-state decode (pos >= window).
+    """
+    from repro.models.layers import apply_rope, decode_attention, rms_norm
+    from repro.models.layers import gelu_mlp, swiglu
+    from repro.models import moe as moe_lib
+    from repro.sharding import ctx
+
+    def decode_step(params, cache, batch):
+        x = transformer._embed_inputs(params, batch, arch
+                                      ).astype(jnp.bfloat16)
+        x = ctx.constrain(x, ctx.BATCH, None, None)
+        pos = cache["pos"]
+        cparams = jax.tree.map(
+            lambda a: a.astype(jnp.bfloat16)
+            if a.dtype == jnp.float32 and a.ndim > 1 else a,
+            params["layers"])
+        layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+
+        def body(h, scanned):
+            p, cl = scanned
+            h = ctx.constrain(h, ctx.BATCH, None, None)
+            normed = rms_norm(h, p["attn_norm"])
+            q = jnp.einsum("bsd,dhk->bshk", normed, p["attn"]["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", normed, p["attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", normed, p["attn"]["wv"])
+            positions = jnp.broadcast_to(pos, (h.shape[0], 1))
+            q = apply_rope(q, positions, arch.rope_theta)
+            k = apply_rope(k, positions, arch.rope_theta)
+            T = cl["k"].shape[1]
+            kc = jax.lax.dynamic_update_slice_in_dim(cl["k"], k, pos, 1)
+            vc = jax.lax.dynamic_update_slice_in_dim(cl["v"], v, pos, 1)
+
+            B, _, Hkv, hd = k.shape
+            # near tier: contiguous BBC-maintained buffer (read-only here)
+            k_near = cl["near_k"]                     # (B, Tn, Hkv, hd)
+            v_near = cl["near_v"]
+            # recent window: an incrementally-written ring buffer.  (A
+            # dynamic_slice of the big time-sharded cache would make GSPMD
+            # all-gather the whole cache per layer — measured 26x worse,
+            # §Perf cell C iter 2.)
+            slot = pos % window
+            k_win = jax.lax.dynamic_update_slice_in_dim(
+                cl["win_k"], k, slot, 1)
+            v_win = jax.lax.dynamic_update_slice_in_dim(
+                cl["win_v"], v, slot, 1)
+            # Two partial attentions + exact LSE merge: concatenating the
+            # two differently-sharded buffers made GSPMD replicate the
+            # result per layer (+47 ms collective, §Perf cell C iter 3);
+            # separate passes keep each buffer's time sharding local.
+            from repro.core.tiered_kv import _far_stats
+            from repro.kernels import ref as kref
+            B_ = q.shape[0]
+            qf = q[:, 0]
+            near_live = jnp.ones((B_, k_near.shape[1]), bool)
+            win_live = jnp.ones((B_, window), bool)
+            sn = _far_stats(qf, k_near, v_near, near_live)
+            sw = _far_stats(qf, k_win, v_win, win_live)
+            out = kref.merge_attention_stats([sn, sw])[:, None].astype(q.dtype)
+            attn_out = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+            h = h + attn_out
+            normed2 = rms_norm(h, p["mlp_norm"])
+            if arch.family == "moe":
+                mlp_out, _ = moe_lib.moe_block(p["moe"], normed2, arch.moe,
+                                               group_size=h.shape[0],
+                                               no_drop=True)
+            elif arch.mlp_gated:
+                mlp_out = swiglu(p["mlp"], normed2)
+            else:
+                mlp_out = gelu_mlp(p["mlp"], normed2)
+            h = h + mlp_out
+            return h, {**cl, "k": kc, "v": vc, "win_k": k_win,
+                       "win_v": v_win}
+
+        x, new_cache = jax.lax.scan(body, x, (cparams, layer_cache))
+        x = rms_norm(x, params["final_norm"].astype(jnp.bfloat16))
+        logits = transformer._lm_logits(params, x, arch)
+        logits = ctx.constrain(logits, ctx.BATCH, None, ctx.MODEL)
+        return logits, {**new_cache, "pos": pos + 1}
+
+    return decode_step
+
+
+def sparse_cache_extras(arch: ArchConfig, batch: int, seq_len: int,
+                        near_pages: int, page: int, dtype=jnp.bfloat16):
+    """Extra cache leaves for the sparse tiered decode step: the
+    materialized near-tier buffers (BBC-maintained between steps)."""
+    L = arch.n_layers
+    hd = arch.resolved_head_dim
+    tn = near_pages * page
+    window = 1024
+    return {
+        "near_k": jnp.zeros((L, batch, tn, arch.n_kv_heads, hd), dtype),
+        "near_v": jnp.zeros((L, batch, tn, arch.n_kv_heads, hd), dtype),
+        "win_k": jnp.zeros((L, batch, window, arch.n_kv_heads, hd), dtype),
+        "win_v": jnp.zeros((L, batch, window, arch.n_kv_heads, hd), dtype),
+    }
+
+
+def greedy_generate(params, arch: ArchConfig, prompt_batch: dict,
+                    steps: int, max_len: int):
+    """Simple batched greedy generation driver (examples/tests)."""
+    logits, cache = transformer.prefill(params, prompt_batch, arch,
+                                        max_len=max_len)
+    if arch.family == "audio":
+        raise NotImplementedError("audio generation uses frame embeddings")
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out = [tok]
+    step = jax.jit(make_decode_step(arch))
+    for _ in range(steps - 1):
+        logits, cache = step(params, cache, {"tokens": tok})
+        tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)[:, :, 0] \
+            if logits.ndim == 4 else jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1), cache

@@ -1,0 +1,96 @@
+"""Model zoo: build functions + input specs for every (arch x shape) cell.
+
+``input_specs`` returns ``jax.ShapeDtypeStruct`` stand-ins for every model
+input (weak-type-correct, shardable, no device allocation) — the dry-run
+pattern.  ``make_batch`` materializes small real batches for smoke tests and
+examples.  Modality frontends (vision patches / audio frames) are stubs per
+the assignment: precomputed embeddings of the documented shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, InputShape
+
+N_PATCHES_STUB = 256          # vision prefix length (qwen2-vl dynamic-res stub)
+
+
+def n_patches(seq_len: int) -> int:
+    """Vision prefix length, capped so small smoke sequences stay valid."""
+    return min(N_PATCHES_STUB, seq_len // 4)
+
+
+def input_specs(arch: ArchConfig, shape: InputShape,
+                compute_dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStructs for one (arch, shape) cell.
+
+    train/prefill: full (B, S) token batch (+ labels for train).
+    decode: one new token per sequence; the KV/state cache is separate (see
+    ``transformer.init_cache``) and sized for shape.seq_len.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs: dict = {}
+    if shape.kind in ("train", "prefill"):
+        if arch.family == "audio":
+            specs["frame_embeds"] = jax.ShapeDtypeStruct((B, S, arch.d_model),
+                                                         compute_dtype)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        if arch.family == "vlm":
+            specs["patch_embeds"] = jax.ShapeDtypeStruct(
+                (B, n_patches(S), arch.d_model), compute_dtype)
+            specs["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+        if shape.kind == "train":
+            if arch.family == "audio":
+                specs["labels"] = jax.ShapeDtypeStruct(
+                    (B, S, arch.n_codebooks), i32)
+            else:
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode: one token per sequence
+        if arch.family == "audio":
+            specs["frame_embeds"] = jax.ShapeDtypeStruct((B, 1, arch.d_model),
+                                                         compute_dtype)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+    return specs
+
+
+def cache_specs(arch: ArchConfig, shape: InputShape,
+                dtype=jnp.bfloat16) -> dict:
+    """ShapeDtypeStructs matching ``transformer.init_cache`` for decode."""
+    from repro.models.transformer import init_cache
+
+    shapes = jax.eval_shape(
+        lambda: init_cache(arch, shape.global_batch, shape.seq_len, dtype))
+    return shapes
+
+
+def make_batch(arch: ArchConfig, shape: InputShape, seed: int = 0,
+               compute_dtype=jnp.float32) -> dict:
+    """A small real batch (for smoke tests / examples)."""
+    rng = np.random.default_rng(seed)
+    out = {}
+    for name, spec in input_specs(arch, shape, compute_dtype).items():
+        if spec.dtype == jnp.int32:
+            hi = arch.vocab if "token" in name or "label" in name else shape.seq_len
+            out[name] = jnp.asarray(
+                rng.integers(0, hi, size=spec.shape, dtype=np.int32))
+        else:
+            out[name] = jnp.asarray(
+                rng.standard_normal(spec.shape) * 0.02, dtype=spec.dtype)
+    if "positions" in out:  # monotone positions for M-RoPE
+        B, S, _ = out["positions"].shape
+        pos = np.broadcast_to(np.arange(S, dtype=np.int32)[None, :, None],
+                              (B, S, 3))
+        out["positions"] = jnp.asarray(pos)
+    return out
+
+
+def flops_per_token(arch: ArchConfig, training: bool = True) -> float:
+    """MODEL_FLOPS: 6*N*D convention (fwd 2ND + bwd 4ND), active params."""
+    n = arch.active_param_count()
+    return (6.0 if training else 2.0) * n

@@ -1,0 +1,188 @@
+"""Mixture-of-Experts layer: top-k routing with group-wise capacity dispatch.
+
+The dispatch follows the GSPMD-native pattern (GShard / Switch / T5X): tokens
+are partitioned into groups of ``group_size``; each group dispatches into a
+per-group expert capacity C = ceil(group_size * top_k / E * capacity_factor)
+via one-hot einsums.  The dispatch tensor is (G, T_g, E, C) whose size is
+group_size^2 * top_k * cf per group — independent of the expert count — so
+group_size is the memory knob.  Experts shard over the 'model' mesh axis (EP);
+the all-to-all emerges from the dispatch einsum's sharding propagation.
+
+Router runs in float32 (standard practice for MoE numerical stability) and
+returns the Switch-style load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.sharding import ctx
+
+
+def init_moe_params(key: jax.Array, d_model: int, cfg: MoEConfig,
+                    dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 5)
+    e, f = cfg.n_experts, cfg.d_expert
+    scale_in = d_model ** -0.5
+    scale_out = f ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d_model, e)) * scale_in
+                   ).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d_model, f)) * scale_in
+                   ).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d_model, f)) * scale_in
+                 ).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d_model)) * scale_out
+                   ).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        km = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": (jax.random.normal(km[0], (d_model, fs)) * scale_in
+                       ).astype(dtype),
+            "w_up": (jax.random.normal(km[1], (d_model, fs)) * scale_in
+                     ).astype(dtype),
+            "w_down": (jax.random.normal(km[2], (fs, d_model)) * scale_out
+                       ).astype(dtype),
+        }
+    return p
+
+
+# Process-wide defaults; launchers flip these as perf knobs
+# (EXPERIMENTS.md §Perf, kimi-k2 iterations).  Dispatch-tensor traffic is
+# T * group_size * top_k * cf — linear in the group size.
+DEFAULT_IMPL = "einsum"
+DEFAULT_GROUP_SIZE = 1024
+# Capacity dropping is batch-composition-dependent (a real property of
+# capacity-based MoE serving); tests flip this to make paths comparable.
+DEFAULT_NO_DROP = False
+
+
+def moe_block(params: dict, x: jax.Array, cfg: MoEConfig,
+              group_size: int | None = None,
+              no_drop: bool | None = None,
+              impl: str | None = None) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (y, aux_loss).
+
+    Tokens are grouped along the flattened (B*S) axis; groups inherit the
+    batch sharding, experts the model sharding.  ``no_drop=True`` sizes the
+    capacity for the worst case (decode paths, where dropping a token would
+    corrupt generation).
+
+    impl='einsum': the classic GSPMD one-hot dispatch.  Its dispatch tensor
+    costs T*g*top_k*cf bytes of traffic — quadratic in the group size and
+    the dominant cost for large-E MoE (measured: ~80% of kimi-k2's wire
+    bytes).  impl='gather': scatter/gather dispatch (MegaBlocks/MaxText
+    family) — builds (E, C) index maps from the same capacity assignment and
+    moves only the gathered rows.  Identical semantics including dropping.
+    """
+    impl = impl or DEFAULT_IMPL
+    group_size = group_size or DEFAULT_GROUP_SIZE
+    if no_drop is None:
+        no_drop = DEFAULT_NO_DROP
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = min(group_size, T)
+    while T % g:                      # group size must divide token count
+        g //= 2
+    G = T // g
+    if no_drop:
+        C = g                         # worst case: every token, same expert
+    else:
+        C = max(1, int(g * K / E * cfg.capacity_factor))
+
+    xg = x.reshape(G, g, D)
+    xg = ctx.constrain(xg, ctx.BATCH, None, None)   # groups follow batch DP
+
+    # --- router (f32) ---
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32),
+                        params["router"])                       # (G,g,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, expert_idx = jax.lax.top_k(probs, K)               # (G,g,K)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # Switch load-balance loss: E * sum_e f_e * p_e.
+    density = jnp.mean(jax.nn.one_hot(expert_idx[..., 0], E), axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(density * mean_prob)
+
+    # --- capacity assignment: position of each (token, choice) in its expert.
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)     # (G,g,K,E)
+    flat = onehot.reshape(G, g * K, E)
+    pos = jnp.cumsum(flat, axis=1) - 1                          # (G,g*K,E)
+    pos = (pos * flat).sum(-1).reshape(G, g, K)                 # (G,g,K)
+    keep = (pos < C)
+    weights = weights * keep
+
+    if impl == "gather":
+        # --- scatter/gather dispatch: move rows, not one-hot tensors ---
+        # token slot index per (expert, capacity): T*K int32 scatters.
+        flat_t = jnp.broadcast_to(
+            jnp.arange(g, dtype=jnp.int32)[None, :, None], (G, g, K))
+        e_idx = expert_idx.astype(jnp.int32)
+        # route invalid (dropped) updates out of bounds -> dropped
+        scatter_e = jnp.where(keep, e_idx, E)
+        scatter_c = jnp.where(keep, pos, C)
+        index_map = jnp.full((G, E, C), g, jnp.int32)           # g == "none"
+        index_map = jax.vmap(
+            lambda im, se, sc, ft: im.at[se.reshape(-1), sc.reshape(-1)]
+            .set(ft.reshape(-1), mode="drop"))(
+                index_map, scatter_e, scatter_c, flat_t)
+
+        xg_pad = jnp.concatenate(
+            [xg, jnp.zeros((G, 1, D), xg.dtype)], axis=1)       # row g = zeros
+        expert_in = jax.vmap(lambda xp, im: jnp.take(xp, im, axis=0))(
+            xg_pad, index_map)                                  # (G,E,C,D)
+        expert_in = ctx.constrain(expert_in, ctx.BATCH, ctx.MODEL, None,
+                                  None)
+        gate = jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])
+        up = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+        act = jax.nn.silu(gate) * up
+        expert_out = jnp.einsum("gecf,efd->gecd", act, params["w_down"])
+
+        # combine: each token gathers its K expert rows back.  Dropped
+        # entries read an arbitrary row but carry zero weight.
+        flat_ec = (jnp.where(keep, e_idx, E - 1) * C
+                   + jnp.where(keep, pos, C - 1))               # (G,g,K)
+        out_rows = jax.vmap(lambda eo, idx: jnp.take(eo, idx, axis=0))(
+            expert_out.reshape(G, E * C, D),
+            flat_ec.reshape(G, g * K)).reshape(G, g, K, D)
+        y = jnp.einsum("gtkd,gtk->gtd", out_rows,
+                       weights.astype(x.dtype)).reshape(B, S, D)
+    else:
+        # --- dispatch / combine one-hot tensors (bf16, the GSPMD pattern).
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C,
+                                dtype=x.dtype)                  # (G,g,K,C)
+        exp_oh = onehot.astype(x.dtype)                         # (G,g,K,E)
+        dispatch = jnp.einsum("gtke,gtkc->gtec", exp_oh,
+                              pos_oh)                           # (G,g,E,C)
+        # per-choice weights: contract k jointly with both one-hots (a plain
+        # dispatch*Sum_k(w) would weight every choice by 1.0 — bug caught by
+        # the gather-impl equivalence test)
+        combine = jnp.einsum("gtke,gtkc,gtk->gtec", exp_oh, pos_oh,
+                             weights.astype(x.dtype))
+
+        # --- expert FFN ---  (EP: the E dim pins to the 'model' axis; the
+        # dispatch einsum's resharding is the all-to-all)
+        expert_in = jnp.einsum("gtec,gtd->gecd", dispatch, xg)  # (G,E,C,D)
+        expert_in = ctx.constrain(expert_in, ctx.BATCH, ctx.MODEL, None,
+                                  None)
+        gate = jnp.einsum("gecd,edf->gecf", expert_in, params["w_gate"])
+        up = jnp.einsum("gecd,edf->gecf", expert_in, params["w_up"])
+        act = jax.nn.silu(gate) * up
+        expert_out = jnp.einsum("gecf,efd->gecd", act, params["w_down"])
+
+        y = jnp.einsum("gtec,gecd->gtd", combine,
+                       expert_out).reshape(B, S, D)
+
+    if "shared" in params:
+        sp = params["shared"]
+        gsh = jnp.einsum("bsd,df->bsf", x, sp["w_gate"])
+        ush = jnp.einsum("bsd,df->bsf", x, sp["w_up"])
+        y = y + jnp.einsum("bsf,fd->bsd", jax.nn.silu(gsh) * ush, sp["w_down"])
+
+    return y.astype(x.dtype), aux

@@ -1,0 +1,217 @@
+"""Mamba-2 SSD (state-space duality) mixer, pure JAX.
+
+Chunked algorithm of Dao & Gu (arXiv:2405.21060): within a chunk of length Q
+the recurrence is computed in its "attention-like" dual form (quadratic in Q),
+while chunk-level states are carried by a linear recurrence over chunks —
+O(S*Q) work and O(S/Q) sequential steps instead of O(S) — which is what makes
+the 500k-token shapes tractable.
+
+Decode is the O(1) recurrent form: one state update per token, no KV cache —
+the reason the TL-DRAM KV-tier mechanism is inapplicable to this family
+(DESIGN.md §Arch-applicability).
+
+Layout: x (B,S,H,P) heads; B/C projections shared across heads (one group);
+state (B,H,P,N).  All recurrence math in float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import rms_norm
+
+
+def d_inner(cfg: SSMConfig) -> int:
+    return cfg.n_heads * cfg.head_dim
+
+
+def conv_dim(cfg: SSMConfig) -> int:
+    return d_inner(cfg) + 2 * cfg.d_state
+
+
+def init_ssm_params(key: jax.Array, d_model: int, cfg: SSMConfig,
+                    dtype=jnp.float32) -> dict:
+    """Projections are separate leaves (not one packed in_proj) so each can
+    carry its own PartitionSpec: z/x shard head-aligned over 'model', B/C/dt
+    stay replicated (tiny) — see sharding/specs.py."""
+    ks = jax.random.split(key, 7)
+    di = d_inner(cfg)
+    N, H = cfg.d_state, cfg.n_heads
+    scale = d_model ** -0.5
+    return {
+        "in_z": (jax.random.normal(ks[0], (d_model, di)) * scale).astype(dtype),
+        "in_x": (jax.random.normal(ks[1], (d_model, di)) * scale).astype(dtype),
+        "in_B": (jax.random.normal(ks[2], (d_model, N)) * scale).astype(dtype),
+        "in_C": (jax.random.normal(ks[3], (d_model, N)) * scale).astype(dtype),
+        "in_dt": (jax.random.normal(ks[4], (d_model, H)) * scale).astype(dtype),
+        "conv_x_w": (jax.random.normal(ks[5], (cfg.d_conv, di)) * 0.2
+                     ).astype(dtype),
+        "conv_x_b": jnp.zeros((di,), dtype),
+        "conv_bc_w": (jax.random.normal(ks[6], (cfg.d_conv, 2 * N)) * 0.2
+                      ).astype(dtype),
+        "conv_bc_b": jnp.zeros((2 * N,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": (jax.random.normal(ks[0], (di, d_model)) * di ** -0.5
+                     ).astype(dtype),
+    }
+
+
+def _split_proj(params, x, cfg: SSMConfig):
+    """x: (B,S,D) -> z (B,S,di), xs (B,S,di), bc (B,S,2N), dt (B,S,H)."""
+    z = jnp.einsum("bsd,dp->bsp", x, params["in_z"])
+    xs = jnp.einsum("bsd,dp->bsp", x, params["in_x"])
+    bc = jnp.einsum("bsd,dp->bsp", x,
+                    jnp.concatenate([params["in_B"], params["in_C"]], axis=1))
+    dt = jnp.einsum("bsd,dp->bsp", x, params["in_dt"])
+    return z, xs, bc, dt
+
+
+def _causal_conv(xbc, conv_w, conv_b, history=None):
+    """Depthwise causal conv1d over S.  history: (B, d_conv-1, cd) or None.
+
+    Returns (activated output, padded input buffer) — the caller slices the
+    conv tail out of ``padded`` at the last *real* position."""
+    d_conv = conv_w.shape[0]
+    if history is None:
+        history = jnp.zeros((xbc.shape[0], d_conv - 1, xbc.shape[-1]), xbc.dtype)
+    padded = jnp.concatenate([history, xbc], axis=1)
+    S = xbc.shape[1]
+    out = sum(padded[:, i:i + S] * conv_w[i] for i in range(d_conv))
+    return jax.nn.silu(out + conv_b), padded
+
+
+def ssd_chunked(params: dict, x: jax.Array, cfg: SSMConfig,
+                initial_state: jax.Array | None = None,
+                conv_history: jax.Array | None = None):
+    """Training/prefill pass.  x: (B,S,D).
+
+    Returns (y (B,S,D), final_state (B,H,P,N) f32, conv_tail (B,d_conv-1,cd)).
+    """
+    B, S_real, D = x.shape
+    H, P, N, Q = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.chunk
+    # Pad to a chunk multiple with identity steps (dt = 0 => decay 1, no
+    # input contribution), so outputs at real positions and the final state
+    # are exact for any sequence length.
+    pad = (-S_real) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    S = S_real + pad
+    nc = S // Q
+
+    z, xs_raw, bc_raw, dt = _split_proj(params, x, cfg)
+    if conv_history is None:
+        hist_x = hist_bc = None
+    else:
+        hist_x, hist_bc = conv_history
+    xs_act, conv_x_pad = _causal_conv(xs_raw, params["conv_x_w"],
+                                      params["conv_x_b"], hist_x)
+    bc_act, conv_bc_pad = _causal_conv(bc_raw, params["conv_bc_w"],
+                                       params["conv_bc_b"], hist_bc)
+    di = d_inner(cfg)
+    d_conv = params["conv_x_w"].shape[0]
+    # conv history for the next segment: window ending at the last REAL token.
+    conv_tail = (
+        jax.lax.dynamic_slice_in_dim(conv_x_pad, S_real, d_conv - 1, axis=1),
+        jax.lax.dynamic_slice_in_dim(conv_bc_pad, S_real, d_conv - 1, axis=1))
+    xs = xs_act.reshape(B, S, H, P).astype(jnp.float32)
+    B_ssm = bc_act[..., :N].astype(jnp.float32)
+    C_ssm = bc_act[..., N:].astype(jnp.float32)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])   # (B,S,H)
+    if pad:
+        live = (jnp.arange(S) < S_real).astype(jnp.float32)
+        dt = dt * live[None, :, None]
+    A = -jnp.exp(params["a_log"])                                      # (H,)
+    dA = dt * A                                                        # (B,S,H) <= 0
+    xdt = xs * dt[..., None]                                           # (B,S,H,P)
+
+    # chunked views
+    dA_c = dA.reshape(B, nc, Q, H)
+    l = jnp.cumsum(dA_c, axis=2)                                       # (B,nc,Q,H)
+    Bc = B_ssm.reshape(B, nc, Q, N)
+    Cc = C_ssm.reshape(B, nc, Q, N)
+    xdt_c = xdt.reshape(B, nc, Q, H, P)
+
+    # --- intra-chunk (dual quadratic form) ---
+    idx = jnp.arange(Q)
+    causal = idx[:, None] >= idx[None, :]
+    # decay(i,j) = exp(l_i - l_j) for i >= j
+    decay = jnp.exp(jnp.clip(l[:, :, :, None, :] - l[:, :, None, :, :],
+                             -60.0, 0.0))                              # (B,nc,Q,Q,H)
+    decay = jnp.where(causal[None, None, :, :, None], decay, 0.0)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                         # (B,nc,Q,Q)
+    y_intra = jnp.einsum("bcij,bcijh,bcjhp->bcihp", cb, decay, xdt_c)
+
+    # --- chunk states and inter-chunk recurrence ---
+    # seg[j] = exp(l_last - l_j); the exponent is a sum of dA <= 0 terms.
+    seg = jnp.exp(jnp.clip(l[:, :, -1, None, :] - l, -60.0, 0.0))      # (B,nc,Q,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, seg, xdt_c)      # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(jnp.clip(l[:, :, -1, :], -60.0, 0.0))        # (B,nc,H)
+
+    h0 = (initial_state if initial_state is not None
+          else jnp.zeros((B, H, P, N), jnp.float32))
+
+    def body(h, inp):
+        st, dec = inp                                     # (B,H,P,N), (B,H)
+        h_next = h * dec[:, :, None, None] + st
+        return h_next, h                                  # emit state *before* chunk
+
+    h_final, h_prev = jax.lax.scan(
+        body, h0, (states.transpose(1, 0, 2, 3, 4),
+                   chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)              # (B,nc,H,P,N)
+
+    inner_decay = jnp.exp(jnp.clip(l, -60.0, 0.0))        # exp(l_i)
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, h_prev, inner_decay)
+
+    y = (y_intra + y_inter).reshape(B, S, H, P)
+    y = y + params["d_skip"][None, None, :, None] * xs
+    y = y.reshape(B, S, di)
+
+    # gated RMSNorm + output projection
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), params["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    if pad:
+        out = out[:, :S_real]
+    return out, h_final, conv_tail
+
+
+def ssd_decode_step(params: dict, x: jax.Array, state: jax.Array,
+                    conv_state: tuple, cfg: SSMConfig):
+    """One-token recurrent step.  x: (B,1,D); state: (B,H,P,N) f32;
+    conv_state: ((B,d_conv-1,di), (B,d_conv-1,2N)).
+    Returns (y (B,1,D), state, conv_state)."""
+    B = x.shape[0]
+    H, P, N = cfg.n_heads, cfg.head_dim, cfg.d_state
+
+    z, xs_raw, bc_raw, dt = _split_proj(params, x, cfg)
+    hist_x, hist_bc = conv_state
+    xs_act, conv_x_pad = _causal_conv(xs_raw, params["conv_x_w"],
+                                      params["conv_x_b"], hist_x)
+    bc_act, conv_bc_pad = _causal_conv(bc_raw, params["conv_bc_w"],
+                                       params["conv_bc_b"], hist_bc)
+    conv_state = (conv_x_pad[:, 1:], conv_bc_pad[:, 1:])   # drop oldest slot
+    xs = xs_act[:, -1].reshape(B, H, P).astype(jnp.float32)
+    bc = bc_act[:, -1]
+    B_ssm = bc[..., :N].astype(jnp.float32)                # (B,N)
+    C_ssm = bc[..., N:].astype(jnp.float32)
+
+    di = d_inner(cfg)
+    dt = jax.nn.softplus(dt[:, -1].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["a_log"])
+    dA = jnp.exp(dt * A)                                   # (B,H)
+    state = state * dA[:, :, None, None] + jnp.einsum(
+        "bhp,bn->bhpn", xs * dt[..., None], B_ssm)
+    y = jnp.einsum("bhpn,bn->bhp", state, C_ssm)
+    y = y + params["d_skip"][None, :, None] * xs
+    y = y.reshape(B, 1, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(x.dtype), params["norm_scale"])
+    out = jnp.einsum("bsi,id->bsd", y, params["out_proj"])
+    return out, state, conv_state

@@ -1,0 +1,407 @@
+"""Unified decoder for every assigned architecture family.
+
+One parameter layout, one scan-over-layers apply, four block flavours:
+
+  dense / vlm / audio : attn + SwiGLU
+  moe                 : attn + MoE (EP-shardable dispatch)
+  ssm                 : SSD mixer only (attention-free)
+  hybrid (Hymba)      : parallel attn + SSD heads, merged, then SwiGLU
+
+Layers are stacked along a leading L axis and applied with ``jax.lax.scan``
+(small HLO, O(1) compile cost in depth) with configurable rematerialization.
+Decode uses an explicit cache pytree; sliding-window attention uses a ring
+buffer of size `window` so the 500k-token shapes keep O(window) KV state.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.sharding import ctx
+from repro.models.layers import (
+    apply_mrope, apply_rope, decode_attention, flash_attention, gelu_mlp,
+    rms_norm, swiglu,
+)
+
+Params = dict
+Cache = dict
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _init_attn(key, arch: ArchConfig, dtype):
+    hd = arch.resolved_head_dim
+    D, H, Hkv = arch.d_model, arch.n_heads, arch.n_kv_heads
+    ks = jax.random.split(key, 4)
+    s = D ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (D, H, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (D, Hkv, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (D, Hkv, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (H, hd, D)) * (H * hd) ** -0.5
+               ).astype(dtype),
+    }
+    if arch.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _init_mlp(key, arch: ArchConfig, dtype):
+    D, F = arch.d_model, arch.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": (jax.random.normal(ks[1], (D, F)) * D ** -0.5).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (F, D)) * F ** -0.5).astype(dtype),
+    }
+    if arch.mlp_gated:
+        p["w_gate"] = (jax.random.normal(ks[0], (D, F)) * D ** -0.5
+                       ).astype(dtype)
+    return p
+
+
+def _init_layer(key, arch: ArchConfig, dtype):
+    ks = jax.random.split(key, 6)
+    D = arch.d_model
+    p: dict = {}
+    if arch.family == "ssm":
+        p["ssm_norm"] = jnp.ones((D,), dtype)
+        p["ssm"] = ssm_lib.init_ssm_params(ks[0], D, arch.ssm, dtype)
+        return p
+    p["attn_norm"] = jnp.ones((D,), dtype)
+    p["attn"] = _init_attn(ks[0], arch, dtype)
+    if arch.family == "hybrid":
+        p["ssm"] = ssm_lib.init_ssm_params(ks[1], D, arch.ssm, dtype)
+        p["attn_out_norm"] = jnp.ones((D,), dtype)
+        p["ssm_out_norm"] = jnp.ones((D,), dtype)
+    p["mlp_norm"] = jnp.ones((D,), dtype)
+    if arch.family == "moe":
+        p["moe"] = moe_lib.init_moe_params(ks[2], D, arch.moe, dtype)
+    else:
+        p["mlp"] = _init_mlp(ks[3], arch, dtype)
+    return p
+
+
+def init_params(key: jax.Array, arch: ArchConfig,
+                dtype=jnp.float32) -> Params:
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    V, D, L = arch.vocab, arch.d_model, arch.n_layers
+    layer_keys = jax.random.split(k_layers, L)
+    layers = jax.vmap(lambda k: _init_layer(k, arch, dtype))(layer_keys)
+    p = {
+        "embed": (jax.random.normal(k_embed, (V, D)) * 0.02).astype(dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((D,), dtype),
+    }
+    if arch.family == "audio":
+        p["lm_head"] = (jax.random.normal(k_head, (arch.n_codebooks, D, V))
+                        * D ** -0.5).astype(dtype)
+    elif not arch.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(k_head, (D, V)) * D ** -0.5
+                        ).astype(dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _attn_apply(p, x, positions, arch: ArchConfig, kv_override=None,
+                decode_cache=None, pos_scalar=None):
+    """Full attention path.  Returns (out, (k, v)) for cache construction."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if arch.qk_norm:
+        q = rms_norm(q, p["q_norm"])
+        k = rms_norm(k, p["k_norm"])
+    if arch.mrope:
+        q = apply_mrope(q, positions, arch.rope_theta)
+        k = apply_mrope(k, positions, arch.rope_theta)
+        pos_1d = positions[..., 0]
+    else:
+        q = apply_rope(q, positions, arch.rope_theta)
+        k = apply_rope(k, positions, arch.rope_theta)
+        pos_1d = positions
+    if decode_cache is not None:
+        k_cache, v_cache = decode_cache
+        out = decode_attention(q, k_cache, v_cache, pos_scalar,
+                               window=arch.sliding_window)
+    else:
+        out = flash_attention(q, k, v, pos_1d, pos_1d, causal=True,
+                              window=arch.sliding_window)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return out, (k, v)
+
+
+def _block_train(p, x, positions, arch: ArchConfig):
+    """One layer, training/prefill mode.  Returns (x, aux, (k, v), ssm_state,
+    conv_tail) — cache parts are None where inapplicable."""
+    aux = jnp.float32(0.0)
+    kv = ssm_state = conv_tail = None
+    if arch.family == "ssm":
+        h, ssm_state, conv_tail = ssm_lib.ssd_chunked(
+            p["ssm"], rms_norm(x, p["ssm_norm"]), arch.ssm)
+        return x + h, aux, kv, ssm_state, conv_tail
+
+    normed = rms_norm(x, p["attn_norm"])
+    attn_out, kv = _attn_apply(p["attn"], normed, positions, arch)
+    if arch.family == "hybrid":
+        ssm_out, ssm_state, conv_tail = ssm_lib.ssd_chunked(
+            p["ssm"], normed, arch.ssm)
+        mixed = 0.5 * (rms_norm(attn_out, p["attn_out_norm"])
+                       + rms_norm(ssm_out, p["ssm_out_norm"]))
+        x = x + mixed
+    else:
+        x = x + attn_out
+
+    normed2 = rms_norm(x, p["mlp_norm"])
+    if arch.family == "moe":
+        mlp_out, aux = moe_lib.moe_block(p["moe"], normed2, arch.moe)
+    elif arch.mlp_gated:
+        mlp_out = swiglu(p["mlp"], normed2)
+    else:
+        mlp_out = gelu_mlp(p["mlp"], normed2)
+    return x + mlp_out, aux, kv, ssm_state, conv_tail
+
+
+def _block_decode(p, x, cache_layer, pos, arch: ArchConfig):
+    """One layer, single-token decode.  cache_layer is this layer's slice."""
+    new_cache = dict(cache_layer)
+    positions = jnp.broadcast_to(pos, (x.shape[0], 1))
+    if arch.mrope:
+        positions = jnp.broadcast_to(pos, (x.shape[0], 1, 3))
+
+    if arch.family == "ssm":
+        h, state, conv = ssm_lib.ssd_decode_step(
+            p["ssm"], rms_norm(x, p["ssm_norm"]),
+            cache_layer["ssm"], cache_layer["conv"], arch.ssm)
+        new_cache.update(ssm=state, conv=conv)
+        return x + h, new_cache
+
+    normed = rms_norm(x, p["attn_norm"])
+    # write the new token's K/V into the cache slot, then attend
+    q = jnp.einsum("bsd,dhk->bshk", normed, p["attn"]["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", normed, p["attn"]["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", normed, p["attn"]["wv"])
+    if arch.qk_norm:
+        q = rms_norm(q, p["attn"]["q_norm"])
+        k = rms_norm(k, p["attn"]["k_norm"])
+    if arch.mrope:
+        q = apply_mrope(q, positions, arch.rope_theta)
+        k = apply_mrope(k, positions, arch.rope_theta)
+    else:
+        q = apply_rope(q, positions, arch.rope_theta)
+        k = apply_rope(k, positions, arch.rope_theta)
+    T = cache_layer["k"].shape[1]
+    slot = pos % T if arch.sliding_window else jnp.minimum(pos, T - 1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache_layer["k"], k, slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache_layer["v"], v, slot, 1)
+    new_cache.update(k=k_cache, v=v_cache)
+    out = decode_attention(q, k_cache, v_cache, pos,
+                           window=arch.sliding_window)
+    attn_out = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
+
+    if arch.family == "hybrid":
+        ssm_out, state, conv = ssm_lib.ssd_decode_step(
+            p["ssm"], normed, cache_layer["ssm"], cache_layer["conv"], arch.ssm)
+        new_cache.update(ssm=state, conv=conv)
+        mixed = 0.5 * (rms_norm(attn_out, p["attn_out_norm"])
+                       + rms_norm(ssm_out, p["ssm_out_norm"]))
+        x = x + mixed
+    else:
+        x = x + attn_out
+
+    normed2 = rms_norm(x, p["mlp_norm"])
+    if arch.family == "moe":
+        # decode: tiny token counts => lossless capacity (no token dropping)
+        mlp_out, _ = moe_lib.moe_block(p["moe"], normed2, arch.moe,
+                                       group_size=x.shape[0], no_drop=True)
+    elif arch.mlp_gated:
+        mlp_out = swiglu(p["mlp"], normed2)
+    else:
+        mlp_out = gelu_mlp(p["mlp"], normed2)
+    return x + mlp_out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model entry points
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params, batch: dict, arch: ArchConfig) -> jax.Array:
+    if arch.family == "audio":
+        return batch["frame_embeds"]
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if arch.family == "vlm" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)
+        n_patch = pe.shape[1]
+        x = jnp.concatenate([pe, x[:, n_patch:]], axis=1)
+    return x
+
+
+def _positions_for(batch: dict, arch: ArchConfig, seq: int, bsz: int):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32), (bsz, seq))
+    if arch.mrope:
+        pos = jnp.broadcast_to(pos[..., None], (bsz, seq, 3))
+    return pos
+
+
+def _lm_logits(params, x, arch: ArchConfig):
+    if arch.family == "audio":
+        return jnp.einsum("bsd,kdv->bskv", x, params["lm_head"])
+    head = params.get("lm_head", params["embed"].T)
+    return jnp.einsum("bsd,dv->bsv", x, head)
+
+
+def forward(params: Params, batch: dict, arch: ArchConfig,
+            remat: str = "full", compute_dtype=jnp.bfloat16):
+    """Training/scoring forward: returns (logits, aux_loss)."""
+    x = _embed_inputs(params, batch, arch).astype(compute_dtype)
+    x = ctx.constrain(x, ctx.BATCH, ctx.SEQ, None)
+    B, S = x.shape[:2]
+    positions = _positions_for(batch, arch, S, B)
+
+    cparams = jax.tree.map(
+        lambda a: a.astype(compute_dtype)
+        if a.dtype == jnp.float32 and a.ndim > 1 else a, params["layers"])
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
+        h, aux_l, *_ = _block_train(layer_params, h, positions, arch)
+        h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
+        return (h, aux + aux_l), None
+
+    if remat == "full":
+        body = jax.checkpoint(body)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), cparams)
+    x = rms_norm(x, params["final_norm"].astype(compute_dtype))
+    logits = _lm_logits(params, x, arch)
+    logits = ctx.constrain(logits, ctx.BATCH,
+                           *([None] * (logits.ndim - 2)), ctx.MODEL)
+    return logits, aux / max(arch.n_layers, 1)
+
+
+def loss_fn(params: Params, batch: dict, arch: ArchConfig,
+            remat: str = "full", aux_weight: float = 0.01):
+    logits, aux = forward(params, batch, arch, remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask", jnp.ones_like(nll))
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss + aux_weight * aux, {"nll": loss, "aux": aux}
+
+
+# -- cache ---------------------------------------------------------------------
+
+def init_cache(arch: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Cache:
+    """Decode cache pytree; leaves have a leading L axis for the layer scan."""
+    L = arch.n_layers
+    c: Cache = {"pos": jnp.zeros((), jnp.int32)}
+    if arch.n_heads:
+        T = min(max_len, arch.sliding_window) if arch.sliding_window else max_len
+        hd = arch.resolved_head_dim
+        c["k"] = jnp.zeros((L, batch, T, arch.n_kv_heads, hd), dtype)
+        c["v"] = jnp.zeros((L, batch, T, arch.n_kv_heads, hd), dtype)
+    if arch.ssm is not None:
+        s = arch.ssm
+        c["ssm"] = jnp.zeros((L, batch, s.n_heads, s.head_dim, s.d_state),
+                             jnp.float32)
+        c["conv"] = (
+            jnp.zeros((L, batch, s.d_conv - 1, ssm_lib.d_inner(s)), dtype),
+            jnp.zeros((L, batch, s.d_conv - 1, 2 * s.d_state), dtype))
+    return c
+
+
+def prefill(params: Params, batch: dict, arch: ArchConfig, max_len: int,
+            compute_dtype=jnp.bfloat16):
+    """Process a prompt, returning (logits, cache ready for decode)."""
+    x = _embed_inputs(params, batch, arch).astype(compute_dtype)
+    x = ctx.constrain(x, ctx.BATCH, ctx.SEQ, None)
+    B, S = x.shape[:2]
+    positions = _positions_for(batch, arch, S, B)
+    cache = init_cache(arch, B, max_len, compute_dtype)
+
+    cparams = jax.tree.map(
+        lambda a: a.astype(compute_dtype)
+        if a.dtype == jnp.float32 and a.ndim > 1 else a, params["layers"])
+
+    def body(h, layer_params):
+        h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
+        h, _, kv, ssm_state, conv_tail = _block_train(
+            layer_params, h, positions, arch)
+        h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
+        outs = {}
+        if kv is not None:
+            k, v = kv
+            T = cache["k"].shape[2]
+            if arch.sliding_window and S > T:
+                # Keep the last `window` tokens, rotated into ring order.
+                k, v = k[:, -T:], v[:, -T:]
+                shift = S % T
+                k = jnp.roll(k, shift, axis=1)
+                v = jnp.roll(v, shift, axis=1)
+            elif S < T:
+                k = jnp.pad(k, ((0, 0), (0, T - S), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, T - S), (0, 0), (0, 0)))
+            outs["k"], outs["v"] = k, v
+        if ssm_state is not None:
+            outs["ssm"] = ssm_state
+            outs["conv"] = conv_tail
+        return h, outs
+
+    x, stacked = jax.lax.scan(body, x, cparams)
+    x = rms_norm(x, params["final_norm"].astype(compute_dtype))
+    logits = _lm_logits(params, x, arch)
+    logits = ctx.constrain(logits, ctx.BATCH,
+                           *([None] * (logits.ndim - 2)), ctx.MODEL)
+    cache = {**cache, **stacked, "pos": jnp.asarray(S, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params: Params, cache: Cache, batch: dict, arch: ArchConfig,
+                compute_dtype=jnp.bfloat16):
+    """One decode step.  batch['tokens']: (B, 1) (or frame_embeds (B,1,D)).
+
+    Returns (logits (B,1,V...), new cache)."""
+    x = _embed_inputs(params, batch, arch).astype(compute_dtype)
+    x = ctx.constrain(x, ctx.BATCH, ctx.SEQ, None)
+    pos = cache["pos"]
+
+    cparams = jax.tree.map(
+        lambda a: a.astype(compute_dtype)
+        if a.dtype == jnp.float32 and a.ndim > 1 else a, params["layers"])
+
+    layer_cache = {k: v for k, v in cache.items() if k != "pos"}
+
+    def body(h, scanned):
+        layer_params, cl = scanned
+        h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
+        h, new_cl = _block_decode(layer_params, h, cl, pos, arch)
+        h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
+        return h, new_cl
+
+    x, new_layer_cache = jax.lax.scan(body, x, (cparams, layer_cache))
+    x = rms_norm(x, params["final_norm"].astype(compute_dtype))
+    logits = _lm_logits(params, x, arch)
+    logits = ctx.constrain(logits, ctx.BATCH,
+                           *([None] * (logits.ndim - 2)), ctx.MODEL)
+    new_cache = {**new_layer_cache, "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,130 @@
+"""AdamW with optional 8-bit (block-quantized) moments.
+
+The 8-bit mode stores both moments as int8 with per-block f32 absmax scales
+(block = 256 elements, following the 8-bit-optimizers recipe) — a 3.5x
+reduction of optimizer-state HBM, which is what lets the trillion-parameter
+config fit a 512-chip fleet (EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "f32"      # 'f32' | 'int8'
+
+
+# -- block quantization --------------------------------------------------------
+
+def _quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % QBLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def _dequantize(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+# -- state ----------------------------------------------------------------------
+
+def init(params, cfg: AdamWConfig):
+    def zeros_like_moment(p):
+        if cfg.moment_dtype == "int8":
+            q, s = _quantize(jnp.zeros_like(p, jnp.float32))
+            return {"q": q, "scale": s}
+        return jnp.zeros_like(p, jnp.float32)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros_like_moment, params),
+        "v": jax.tree.map(zeros_like_moment, params),
+    }
+
+
+def _read_moment(mom, like, cfg: AdamWConfig, kind: str = "m"):
+    if cfg.moment_dtype == "int8":
+        val = _dequantize(mom["q"], mom["scale"], like.shape)
+        if kind == "v":      # v is stored in sqrt-space (8-bit-Adam recipe):
+            return jnp.square(val)   # compresses the dynamic range ~2x in log
+        return val
+    return mom
+
+
+def _write_moment(val, cfg: AdamWConfig, kind: str = "m"):
+    if cfg.moment_dtype == "int8":
+        if kind == "v":
+            val = jnp.sqrt(jnp.maximum(val, 0.0))
+        q, s = _quantize(val)
+        return {"q": q, "scale": s}
+    return val
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def update(params, grads, state, cfg: AdamWConfig, lr: jax.Array | float):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state["step"] + 1
+    c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def leaf(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_f = _read_moment(m, p, cfg, "m")
+        v_f = _read_moment(v, p, cfg, "v")
+        m_new = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_new = cfg.b2 * v_f + (1 - cfg.b2) * jnp.square(g)
+        upd = (m_new / c1) / (jnp.sqrt(v_new / c2) + cfg.eps)
+        if p.ndim >= 2:  # no decay on norms/biases/scalars
+            upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return (p_new, _write_moment(m_new, cfg, "m"),
+                _write_moment(v_new, cfg, "v"))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [leaf(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"step": step, "m": new_m, "v": new_v}, {"grad_norm": gnorm}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr

@@ -1,0 +1,67 @@
+"""Elastic scaling: rebuild the mesh from surviving devices and reshard.
+
+When hosts die (heartbeat timeout) or join, the controller:
+  1. picks the largest supported mesh shape <= surviving device count;
+  2. rebuilds shardings from the same rule set (`sharding.specs`) — the rules
+     are mesh-parametric, so no per-topology code;
+  3. reshards the restored checkpoint onto the new mesh (`jax.device_put`
+     with the new NamedShardings; arrays were host-gathered by restore);
+  4. rescales the data-parallel batch (global batch preserved by gradient
+     accumulation when the DP width shrank).
+
+``plan_mesh`` is pure and fully unit-testable; ``reshard`` works on any
+device set (tests exercise it on CPU devices).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.sharding import specs as sh
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: tuple[int, ...]
+    axis_names: tuple[str, ...]
+    dp_size: int
+    grad_accum: int              # restores the global batch
+
+
+def plan_mesh(n_devices: int, model_parallel: int,
+              target_dp: int) -> ElasticPlan:
+    """Largest (data, model) mesh fitting n_devices with the given TP width.
+
+    Model parallelism is preserved (resharding TP mid-run would change
+    per-op layouts); data parallelism absorbs the loss, with gradient
+    accumulation keeping the global batch constant.
+    """
+    if n_devices < model_parallel:
+        raise ValueError(
+            f"need >= {model_parallel} devices for model parallelism, "
+            f"have {n_devices}")
+    dp = n_devices // model_parallel
+    # dp must divide the target so accumulation is integral
+    while dp > 1 and target_dp % dp:
+        dp -= 1
+    accum = target_dp // dp
+    return ElasticPlan(mesh_shape=(dp, model_parallel),
+                       axis_names=("data", "model"),
+                       dp_size=dp, grad_accum=accum)
+
+
+def build_mesh(plan: ElasticPlan, devices=None):
+    devices = np.asarray(devices if devices is not None else jax.devices())
+    need = int(np.prod(plan.mesh_shape))
+    return jax.sharding.Mesh(
+        devices[:need].reshape(plan.mesh_shape), plan.axis_names)
+
+
+def reshard(tree, arch, mesh, fsdp: bool = True):
+    """Place a host-resident pytree onto ``mesh`` under the standard rules."""
+    pspecs = sh.param_specs(tree, arch, mesh, fsdp=fsdp)
+    shardings = sh.to_named(pspecs, mesh)
+    return jax.tree.map(jax.device_put, tree, shardings)

@@ -1,0 +1,73 @@
+"""Activation-sharding context: explicit constraints for model internals.
+
+GSPMD propagates shardings from inputs/params, but scan carries, embedding
+gathers, and losses can settle on pathological layouts (e.g. batch-replicated
+activations when the embedding table is feature-sharded).  The launchers
+install an ``ActivationSharding`` context; the model calls ``constrain`` at a
+few anchor points (embedding output, layer-scan carry, logits) to pin the
+batch/model axes.  Outside any context (CPU unit tests), ``constrain`` is a
+no-op.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+BATCH = "__batch__"
+MODEL = "__model__"
+SEQ = "__seq__"     # sequence parallelism: shard over 'model' when enabled
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, batch_axes: tuple[str, ...] | None = None,
+                        seq_shard: bool = False):
+    """Install activation-sharding anchors for code lowered inside.
+
+    seq_shard=True turns SEQ-role dims into 'model'-sharded (Megatron-style
+    sequence parallelism: the per-layer TP all-reduces become
+    reduce-scatter + all-gather pairs, halving activation wire bytes)."""
+    if batch_axes is None:
+        batch_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    prev = getattr(_state, "cfg", None)
+    _state.cfg = (mesh, batch_axes, seq_shard)
+    try:
+        yield
+    finally:
+        _state.cfg = prev
+
+
+def constrain(x: jax.Array, *roles) -> jax.Array:
+    """roles: one of BATCH, MODEL, SEQ, None per dimension of x.
+
+    BATCH dims shard over the data axes (skipped when not divisible, e.g.
+    batch-1 long-context decode); MODEL dims over 'model'; SEQ dims over
+    'model' only when sequence parallelism is enabled.
+    """
+    cfg = getattr(_state, "cfg", None)
+    if cfg is None:
+        return x
+    mesh, batch_axes, seq_shard = cfg
+    batch_size = 1
+    for a in batch_axes:
+        batch_size *= mesh.shape[a]
+    model_ok = "model" in mesh.shape
+    spec = []
+    for dim, role in enumerate(roles):
+        if role == BATCH and batch_axes and x.shape[dim] % batch_size == 0:
+            spec.append(batch_axes)
+        elif role == MODEL and model_ok \
+                and x.shape[dim] % mesh.shape["model"] == 0:
+            spec.append("model")
+        elif role == SEQ and seq_shard and model_ok \
+                and x.shape[dim] % mesh.shape["model"] == 0:
+            spec.append("model")
+        else:
+            spec.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

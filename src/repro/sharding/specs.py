@@ -1,0 +1,234 @@
+"""Auto-divisible sharding rules: param/input/cache PartitionSpecs per arch.
+
+Policy (DESIGN.md Sec. 5):
+  * TP ('model' axis): attention heads, FFN hidden, expert dim (EP), vocab.
+  * DP/FSDP ('pod','data' axes): batch; optionally every parameter's d_model
+    dim + optimizer moments (ZeRO-3-style, XLA inserts the per-layer
+    all-gathers from the shardings).
+  * Every rule is guarded by divisibility: a dim shards over an axis only if
+    evenly divisible, otherwise the next candidate dim is tried (e.g. GQA
+    with kv_heads < model axis shards head_dim instead), else replicates.
+
+The rules are path-based over the parameter pytree, so they apply uniformly
+to params, gradients, and (f32) optimizer moments.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, InputShape
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return False
+    size = 1
+    for a in (axis if isinstance(axis, tuple) else (axis,)):
+        if a not in mesh.shape:
+            return False
+        size *= mesh.shape[a]
+    return n % size == 0
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _pick(mesh: Mesh, dims: dict[int, int], *candidates):
+    """candidates: (dim_index, axis) tried in order; returns {dim: axis}."""
+    taken: dict[int, Any] = {}
+    used_axes: set = set()
+    for dim, axis in candidates:
+        key = axis if isinstance(axis, tuple) else (axis,)
+        if dim in taken or any(a in used_axes for a in key):
+            continue
+        if _div(dims[dim], mesh, axis):
+            taken[dim] = axis
+            used_axes.update(key)
+    return taken
+
+
+def _spec(ndim: int, placed: dict[int, Any]) -> P:
+    return P(*[placed.get(i) for i in range(ndim)])
+
+
+def _model_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def attn_heads_shardable(arch: ArchConfig, mesh: Mesh) -> bool:
+    """TP attention only when Q heads divide the model axis; otherwise the
+    attention weights replicate across 'model' (FSDP still shards them) and
+    the MLP/vocab carry the tensor parallelism.  Avoids GSPMD involuntary
+    rematerialization from mixed head/head_dim shardings."""
+    return arch.n_heads > 0 and arch.n_heads % _model_size(mesh) == 0
+
+
+def kv_heads_shardable(arch: ArchConfig, mesh: Mesh) -> bool:
+    return (attn_heads_shardable(arch, mesh)
+            and arch.n_kv_heads % _model_size(mesh) == 0)
+
+
+def ssm_heads_shardable(arch: ArchConfig, mesh: Mesh) -> bool:
+    """SSD shards head-aligned: d_inner splits over 'model' only when whole
+    heads land on each shard (mamba2: 64 heads over 16 ✓; hymba: 25 ✗)."""
+    return (arch.ssm is not None
+            and arch.ssm.n_heads % _model_size(mesh) == 0)
+
+
+def param_specs(param_shapes, arch: ArchConfig, mesh: Mesh,
+                fsdp: bool = True, dp_override: tuple[str, ...] | None = None):
+    """PartitionSpec pytree matching ``param_shapes`` (shapes or arrays)."""
+    dp = (dp_override if dp_override is not None else dp_axes(mesh)) \
+        if fsdp else None
+    heads_ok = attn_heads_shardable(arch, mesh)
+    kv_ok = kv_heads_shardable(arch, mesh)
+    ssm_ok = ssm_heads_shardable(arch, mesh)
+
+    def rule(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        shape = leaf.shape
+        dims = dict(enumerate(shape))
+        nd = len(shape)
+
+        def pick(*cands):
+            return _spec(nd, _pick(mesh, dims, *cands))
+
+        # Embedding/head shard the vocab only: feature-sharding the table
+        # makes the token gather propagate a batch-replicated layout into
+        # the whole network (observed via GSPMD involuntary-remat warnings).
+        if name.endswith("embed"):                      # (V, D)
+            return pick((0, "model"), (0, dp))
+        if name.endswith("lm_head"):
+            if nd == 3:                                 # (K, D, V) audio
+                return pick((2, "model"), (2, dp))
+            return pick((1, "model"), (1, dp))          # (D, V)
+        if "attn" in name:
+            if name.endswith("wq"):                     # (L, D, H, hd)
+                return pick((2, "model"), (1, dp)) if heads_ok \
+                    else pick((1, dp))
+            if name.endswith(("wk", "wv")):             # (L, D, Hkv, hd)
+                return pick((2, "model"), (1, dp)) if kv_ok \
+                    else pick((1, dp))
+            if name.endswith("wo"):                     # (L, H, hd, D)
+                return pick((1, "model"), (3, dp)) if heads_ok \
+                    else pick((3, dp))
+            return P()                                   # qk norms
+        if "moe" in name:
+            if name.endswith("router"):                 # (L, D, E)
+                return pick((1, dp))
+            if "shared" in name:
+                if name.endswith(("w_gate", "w_up")):   # (L, D, F)
+                    return pick((2, "model"), (1, dp))
+                return pick((1, "model"), (2, dp))      # (L, F, D)
+            if name.endswith(("w_gate", "w_up")):       # (L, E, D, F)
+                return pick((1, "model"), (2, dp))
+            if name.endswith("w_down"):                 # (L, E, F, D)
+                return pick((1, "model"), (3, dp))
+        if "mlp" in name:
+            if name.endswith(("w_gate", "w_up")):       # (L, D, F)
+                return pick((2, "model"), (1, dp))
+            if name.endswith("w_down"):                 # (L, F, D)
+                return pick((1, "model"), (2, dp))
+        if "ssm" in name:
+            if name.endswith(("in_z", "in_x")):         # (L, D, di)
+                return pick((2, "model"), (1, dp)) if ssm_ok \
+                    else pick((1, dp))
+            if name.endswith("out_proj"):               # (L, di, D)
+                return pick((1, "model"), (2, dp)) if ssm_ok \
+                    else pick((2, dp))
+            if name.endswith(("in_B", "in_C", "in_dt")):  # (L, D, small)
+                return pick((1, dp))
+            if name.endswith(("conv_x_w",)):            # (L, dc, di)
+                return pick((2, "model")) if ssm_ok else P()
+            if name.endswith(("conv_x_b", "norm_scale")):  # (L, di)
+                return pick((1, "model")) if ssm_ok else P()
+            return P()                                   # a_log, conv_bc, ...
+        return P()                                       # norms etc.
+
+    return jax.tree_util.tree_map_with_path(rule, param_shapes)
+
+
+def moment_specs(param_specs_tree, opt_shapes, mesh: Mesh, fsdp: bool = True):
+    """Specs for optimizer state: f32 moments mirror the params; int8
+    block-quantized moments shard their flat block dim over the DP axes."""
+    dp = dp_axes(mesh) if fsdp else ()
+
+    def rule(path, leaf):
+        names = [str(getattr(k, "key", k)) for k in path]
+        if names and names[0] == "step":
+            return P()
+        if names[-1] in ("q", "scale"):                 # int8 moment leaves
+            nblocks = leaf.shape[0]
+            ax = dp if dp and nblocks % int(np.prod(
+                [mesh.shape[a] for a in dp])) == 0 else None
+            return P(ax, *([None] * (len(leaf.shape) - 1)))
+        # f32 moments: same spec as the parameter at the same subpath
+        sub = param_specs_tree
+        for k in names[1:]:                              # skip 'm'/'v'
+            sub = sub[k]
+        return sub
+
+    return jax.tree_util.tree_map_with_path(rule, opt_shapes)
+
+
+def batch_specs(batch_shapes, arch: ArchConfig, shape: InputShape,
+                mesh: Mesh, seq_shard: bool = False):
+    """Input batch: shard batch over DP axes (guarded), optionally the
+    sequence over 'model' (sequence parallelism for long prefill)."""
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        dims = dict(enumerate(leaf.shape))
+        nd = len(leaf.shape)
+        cands = [(0, dp)]
+        if seq_shard and nd >= 2:
+            cands.append((1, "model"))
+        return _spec(nd, _pick(mesh, dims, *cands))
+
+    return jax.tree_util.tree_map_with_path(rule, batch_shapes)
+
+
+def cache_specs(cache_shapes, arch: ArchConfig, mesh: Mesh):
+    """Decode cache: batch over DP; KV caches shard the *time* axis over
+    'model' (uniform across GQA layouts, and the per-step collective is only
+    the flash-decode softmax-stats reduction); SSD state shards heads when
+    head-aligned."""
+    dp = dp_axes(mesh)
+    ssm_ok = ssm_heads_shardable(arch, mesh)
+
+    def rule(path, leaf):
+        name = "/".join(str(getattr(k, "key", k)) for k in path)
+        dims = dict(enumerate(leaf.shape))
+        nd = len(leaf.shape)
+        if name.endswith(("/k", "/v")) or name in ("k", "v"):
+            # (L, B, T, Hkv, hd)
+            return _spec(nd, _pick(mesh, dims, (1, dp), (2, "model")))
+        if "ssm" in name:                   # (L, B, H, P, N)
+            cands = [(1, dp)] + ([(2, "model")] if ssm_ok else [])
+            return _spec(nd, _pick(mesh, dims, *cands))
+        if "conv" in name:                  # conv/0: (L,B,dc-1,di); conv/1: 2N
+            cands = [(1, dp)]
+            if ssm_ok and name.endswith("0"):   # x-path channels, head-aligned
+                cands.append((3, "model"))
+            return _spec(nd, _pick(mesh, dims, *cands))
+        if name.endswith(("near_k", "near_v", "far_k", "far_v",
+                          "win_k", "win_v")):
+            if nd == 5:                     # (L, B, Tn, Hkv, hd) decode-step
+                return _spec(nd, _pick(mesh, dims, (1, dp), (2, "model")))
+            return _spec(nd, _pick(mesh, dims, (0, dp), (1, "model")))
+        if name.endswith("near_idx"):       # (L, B, near_pages)
+            return _spec(nd, _pick(mesh, dims, (1, dp)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,168 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+import hypothesis.strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.ssd_scan import ssd_chunk_scan
+from repro.kernels.tiered_attention import near_decode_attention
+from repro.kernels.tiered_gather import tiered_gather
+
+
+def _rand(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.5).astype(dtype)
+
+
+TOL = {jnp.float32: dict(rtol=2e-5, atol=2e-5),
+       jnp.bfloat16: dict(rtol=2e-2, atol=2e-2)}
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,S,H,Hkv,hd,bq,bkv", [
+        (1, 128, 4, 4, 64, 64, 64),      # MHA
+        (2, 256, 8, 2, 64, 128, 128),    # GQA 4:1
+        (1, 128, 4, 1, 128, 128, 64),    # MQA, wide head
+        (2, 64, 2, 2, 32, 32, 32),       # tiny
+    ])
+    def test_against_ref(self, dtype, B, S, H, Hkv, hd, bq, bkv):
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = _rand(ks[0], (B, S, H, hd), dtype)
+        k = _rand(ks[1], (B, S, Hkv, hd), dtype)
+        v = _rand(ks[2], (B, S, Hkv, hd), dtype)
+        got = flash_attention_fwd(q, k, v, causal=True, block_q=bq,
+                                  block_kv=bkv, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **TOL[dtype])
+
+    def test_sliding_window(self):
+        ks = jax.random.split(jax.random.key(1), 3)
+        B, S, H, hd, W = 1, 256, 2, 32, 64
+        q = _rand(ks[0], (B, S, H, hd), jnp.float32)
+        k = _rand(ks[1], (B, S, H, hd), jnp.float32)
+        v = _rand(ks[2], (B, S, H, hd), jnp.float32)
+        got = flash_attention_fwd(q, k, v, causal=True, window=W,
+                                  block_q=64, block_kv=64, interpret=True)
+        want = ref.flash_attention_ref(q, k, v, causal=True, window=W)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+    def test_matches_model_layer(self):
+        """The model's scan formulation and the kernel agree."""
+        from repro.models.layers import flash_attention as model_flash
+        ks = jax.random.split(jax.random.key(2), 3)
+        B, S, H, hd = 2, 128, 4, 32
+        q = _rand(ks[0], (B, S, H, hd), jnp.float32)
+        k = _rand(ks[1], (B, S, H, hd), jnp.float32)
+        v = _rand(ks[2], (B, S, H, hd), jnp.float32)
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        a = model_flash(q, k, v, pos, pos, causal=True, kv_chunk=64)
+        b = flash_attention_fwd(q, k, v, causal=True, block_q=64,
+                                block_kv=64, interpret=True)
+        np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+class TestNearDecodeAttention:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,H,Hkv,hd,T", [
+        (2, 4, 2, 64, 256),
+        (1, 8, 8, 32, 128),
+        (3, 6, 2, 128, 128),
+    ])
+    def test_stats_against_ref(self, dtype, B, H, Hkv, hd, T):
+        ks = jax.random.split(jax.random.key(3), 4)
+        q = _rand(ks[0], (B, H, hd), dtype)
+        k = _rand(ks[1], (B, T, Hkv, hd), dtype)
+        v = _rand(ks[2], (B, T, Hkv, hd), dtype)
+        length = jax.random.randint(ks[3], (B,), 1, T + 1)
+        out, m, l = near_decode_attention(q, k, v, length, block_kv=64,
+                                          interpret=True)
+        want_out, want_m, want_l = ref.decode_attention_stats_ref(
+            q[:, None], k, v, length)
+        np.testing.assert_allclose(np.asarray(m), np.asarray(want_m),
+                                   **TOL[dtype])
+        np.testing.assert_allclose(np.asarray(l), np.asarray(want_l),
+                                   rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4)
+        # compare normalized outputs (unnormalized scale is implementation-defined)
+        np.testing.assert_allclose(
+            np.asarray(out / np.maximum(np.asarray(l)[..., None], 1e-30)),
+            np.asarray(want_out / np.maximum(np.asarray(want_l)[..., None],
+                                             1e-30)),
+            **TOL[dtype])
+
+    def test_two_tier_merge_equals_monolithic(self):
+        """Near+far tiers with LSE merge == attention over the concatenation —
+        the correctness property of the TL-DRAM read path."""
+        ks = jax.random.split(jax.random.key(4), 5)
+        B, H, Hkv, hd, Tn, Tf = 2, 4, 2, 32, 128, 192
+        q = _rand(ks[0], (B, H, hd), jnp.float32)
+        kn = _rand(ks[1], (B, Tn, Hkv, hd), jnp.float32)
+        vn = _rand(ks[2], (B, Tn, Hkv, hd), jnp.float32)
+        kf = _rand(ks[3], (B, Tf, Hkv, hd), jnp.float32)
+        vf = _rand(ks[4], (B, Tf, Hkv, hd), jnp.float32)
+        n_len = jnp.array([128, 64], jnp.int32)
+        f_len = jnp.array([192, 100], jnp.int32)
+
+        got = ops.tiered_decode_attention(q, kn, vn, n_len, kf, vf, f_len,
+                                          block_kv=64)
+
+        # monolithic: concatenate live prefixes per batch element
+        outs = []
+        for b in range(B):
+            kcat = jnp.concatenate([kn[b, :n_len[b]], kf[b, :f_len[b]]])[None]
+            vcat = jnp.concatenate([vn[b, :n_len[b]], vf[b, :f_len[b]]])[None]
+            o = ref.decode_attention_ref(
+                q[b:b + 1, None], kcat, vcat,
+                jnp.array([kcat.shape[1]], jnp.int32))
+            outs.append(o[0, 0])
+        want = jnp.stack(outs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestTieredGather:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("T,C,D,bt", [(64, 16, 32, 32), (100, 8, 64, 64),
+                                          (256, 128, 16, 128)])
+    def test_against_ref(self, dtype, T, C, D, bt):
+        ks = jax.random.split(jax.random.key(5), 3)
+        near = _rand(ks[0], (C, D), dtype)
+        far = _rand(ks[1], (T, D), dtype)
+        slots = jax.random.randint(ks[2], (T,), -1, C)
+        got = tiered_gather(near, slots, far, block_t=bt, interpret=True)
+        want = ref.tiered_gather_ref(near, slots, far)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), rtol=0, atol=0)
+
+    @given(t=st.integers(8, 96), c=st.integers(1, 32), seed=st.integers(0, 99))
+    @settings(max_examples=20, deadline=None)
+    def test_property_random_shapes(self, t, c, seed):
+        ks = jax.random.split(jax.random.key(seed), 3)
+        D = 8
+        near = _rand(ks[0], (c, D), jnp.float32)
+        far = _rand(ks[1], (t, D), jnp.float32)
+        slots = jax.random.randint(ks[2], (t,), -1, c)
+        got = tiered_gather(near, slots, far, block_t=32, interpret=True)
+        want = ref.tiered_gather_ref(near, slots, far)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestSSDScan:
+    @pytest.mark.parametrize("B,nc,H,P,N,bh", [
+        (1, 4, 8, 16, 32, 4), (2, 8, 4, 8, 16, 4), (1, 16, 16, 32, 16, 8)])
+    def test_against_ref(self, B, nc, H, P, N, bh):
+        ks = jax.random.split(jax.random.key(6), 3)
+        states = _rand(ks[0], (B, nc, H, P, N), jnp.float32)
+        decays = jax.nn.sigmoid(_rand(ks[1], (B, nc, H), jnp.float32))
+        h0 = _rand(ks[2], (B, H, P, N), jnp.float32)
+        hp, hf = ssd_chunk_scan(states, decays, h0, block_h=bh, interpret=True)
+        want_hp, want_hf = jax.vmap(ref.ssd_chunk_scan_ref)(states, decays, h0)
+        np.testing.assert_allclose(np.asarray(hp), np.asarray(want_hp),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(hf), np.asarray(want_hf),
+                                   rtol=1e-6, atol=1e-6)

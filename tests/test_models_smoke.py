@@ -1,0 +1,167 @@
+"""Per-architecture smoke tests: reduced configs, one forward / train / decode
+step on CPU, asserting output shapes and no NaNs.  The FULL configs are only
+exercised via the dry-run (ShapeDtypeStruct, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import InputShape
+from repro.configs.registry import ARCHS
+from repro.models import model_zoo, transformer
+
+SMOKE_SHAPE = InputShape("smoke", seq_len=64, global_batch=2, kind="train")
+
+ARCH_IDS = sorted(ARCHS)
+
+
+@pytest.fixture(scope="module")
+def built():
+    """Cache reduced params per arch across tests."""
+    cache = {}
+
+    def get(name):
+        if name not in cache:
+            arch = ARCHS[name].reduced()
+            params = transformer.init_params(jax.random.key(0), arch)
+            cache[name] = (arch, params)
+        return cache[name]
+
+    return get
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_forward_shapes_and_finite(name, built):
+    arch, params = built(name)
+    batch = model_zoo.make_batch(arch, SMOKE_SHAPE)
+    logits, aux = transformer.forward(params, batch, arch)
+    B, S = 2, 64
+    if arch.family == "audio":
+        assert logits.shape == (B, S, arch.n_codebooks, arch.vocab)
+    else:
+        assert logits.shape == (B, S, arch.vocab)
+    assert np.isfinite(np.asarray(logits, dtype=np.float32)).all()
+    assert np.isfinite(float(aux))
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_train_step_reduces_loss(name, built):
+    arch, params = built(name)
+    batch = model_zoo.make_batch(arch, SMOKE_SHAPE)
+
+    @jax.jit
+    def step(p):
+        (loss, metrics), grads = jax.value_and_grad(
+            transformer.loss_fn, has_aux=True)(p, batch, arch)
+        p = jax.tree.map(lambda a, g: a - 0.5 * g.astype(a.dtype), p, grads)
+        return p, loss
+
+    p, loss0 = step(params)
+    assert np.isfinite(float(loss0))
+    for _ in range(3):
+        p, loss = step(p)
+    assert float(loss) < float(loss0), "SGD on one batch must reduce loss"
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_grads_finite_and_nonzero(name, built):
+    arch, params = built(name)
+    batch = model_zoo.make_batch(arch, SMOKE_SHAPE)
+    grads = jax.grad(lambda p: transformer.loss_fn(p, batch, arch)[0])(params)
+    leaves = jax.tree.leaves(grads)
+    assert all(np.isfinite(np.asarray(g, np.float32)).all() for g in leaves)
+    total = sum(float(jnp.sum(jnp.abs(g))) for g in leaves)
+    assert total > 0.0
+
+
+@pytest.mark.parametrize("name", ARCH_IDS)
+def test_prefill_then_decode_matches_forward(name, built, monkeypatch):
+    """Decode path correctness: prefill(S) + decode(1) logits must match the
+    full forward at the corresponding positions.
+
+    MoE runs lossless (no capacity drops): with capacity enabled, dropping
+    is batch-composition-dependent, so prefill+decode and the monolithic
+    forward can legitimately route borderline tokens differently."""
+    from repro.models import moe as moe_lib
+    monkeypatch.setattr(moe_lib, "DEFAULT_NO_DROP", True)
+    arch, params = built(name)
+    S, B = 32, 2
+    shape = InputShape("s", seq_len=S, global_batch=B, kind="prefill")
+    batch = model_zoo.make_batch(arch, shape, compute_dtype=jnp.float32)
+
+    logits_full, _ = transformer.forward(params, batch, arch,
+                                         compute_dtype=jnp.float32)
+    logits_pre, cache = transformer.prefill(params, batch, arch, max_len=S + 8,
+                                            compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(logits_pre, np.float32),
+                               np.asarray(logits_full, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+    # decode one token; compare against forward over the extended sequence
+    if arch.family == "audio":
+        step_batch = {"frame_embeds": batch["frame_embeds"][:, :1]}
+        ext = {"frame_embeds": jnp.concatenate(
+            [batch["frame_embeds"], step_batch["frame_embeds"]], axis=1)}
+    else:
+        step_batch = {"tokens": batch["tokens"][:, :1]}
+        ext = {"tokens": jnp.concatenate(
+            [batch["tokens"], step_batch["tokens"]], axis=1)}
+        if arch.family == "vlm":
+            step_batch["positions"] = None  # decode derives positions from pos
+            step_batch.pop("positions")
+            ext["patch_embeds"] = batch["patch_embeds"]
+            B_, S_ = ext["tokens"].shape
+            pos = np.broadcast_to(np.arange(S_, dtype=np.int32)[None, :, None],
+                                  (B_, S_, 3))
+            ext["positions"] = jnp.asarray(pos)
+
+    logits_dec, cache2 = transformer.decode_step(params, cache, step_batch,
+                                                 arch,
+                                                 compute_dtype=jnp.float32)
+    logits_ext, _ = transformer.forward(params, ext, arch,
+                                        compute_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(logits_dec[:, 0], np.float32),
+                               np.asarray(logits_ext[:, -1], np.float32),
+                               rtol=5e-2, atol=5e-2)
+    assert int(cache2["pos"]) == S + 1
+
+
+@pytest.mark.parametrize("name", ["hymba-1.5b", "mamba2-1.3b"])
+def test_long_context_archs_have_bounded_decode_state(name):
+    """The sub-quadratic archs must not allocate O(seq) KV for huge contexts
+    beyond their window (hymba) or at all (mamba2)."""
+    arch = ARCHS[name].reduced()
+    cache = transformer.init_cache(arch, batch=1, max_len=100_000)
+    if name == "mamba2-1.3b":
+        assert "k" not in cache
+    else:
+        assert cache["k"].shape[2] == arch.sliding_window  # ring buffer
+    total_bytes = sum(np.prod(v.shape) * v.dtype.itemsize
+                      for v in jax.tree.leaves(cache))
+    assert total_bytes < 50e6
+
+
+def test_param_counts_sane():
+    """Analytical param counts should be in the advertised ballpark."""
+    expected = {
+        "kimi-k2-1t-a32b": (0.9e12, 1.3e12),
+        "llama4-scout-17b-a16e": (0.9e11, 1.3e11),  # 16 experts full size
+        "deepseek-coder-33b": (30e9, 36e9),
+        "yi-9b": (8e9, 10e9),
+        "qwen3-1.7b": (1.4e9, 2.4e9),
+        "starcoder2-3b": (2.7e9, 3.6e9),
+        "mamba2-1.3b": (1.1e9, 1.6e9),
+        "hymba-1.5b": (1.2e9, 1.9e9),
+        "qwen2-vl-2b": (1.2e9, 2.3e9),
+        "musicgen-medium": (1.3e9, 2.2e9),
+    }
+    for name, (lo, hi) in expected.items():
+        n = ARCHS[name].param_count()
+        assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B params out of [{lo/1e9}, {hi/1e9}]"
+
+
+def test_active_params_moe():
+    k2 = ARCHS["kimi-k2-1t-a32b"]
+    active = k2.active_param_count()
+    assert 25e9 <= active <= 45e9, f"K2 active {active/1e9:.1f}B"

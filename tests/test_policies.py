@@ -1,0 +1,106 @@
+"""Property-based tests of the near-segment caching policies (hypothesis)."""
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core.policies import (
+    CacheState, PolicyCosts, make_policy,
+)
+
+COSTS = PolicyCosts(near_cost=23.4, far_cost=65.8, migrate_cost=69.8)
+
+
+def _drive(policy_name, accesses, capacity=4):
+    """Replays an access stream through a policy; returns final state."""
+    pol = make_policy(policy_name, COSTS)
+    st_ = CacheState(capacity=capacity)
+    now = 0.0
+    for i, (row, is_write) in enumerate(accesses):
+        now += 10.0
+        in_near = st_.hit(row)
+        pol.on_access(st_, row, now, is_write, in_near, activated=True)
+        if not in_near:
+            d = pol.decide(st_, row, now, bank_idle=True)
+            if d.promote:
+                pol.apply_promotion(st_, row, d)
+        if i % 16 == 15:
+            pol.decay_scores(st_)
+    return st_
+
+
+rows = st.integers(min_value=0, max_value=30)
+accesses = st.lists(st.tuples(rows, st.booleans()), min_size=1, max_size=300)
+
+
+class TestCacheInvariants:
+    @given(accesses=accesses, policy=st.sampled_from(["SC", "WMC", "BBC"]))
+    @settings(max_examples=150, deadline=None)
+    def test_lookup_slots_consistent(self, accesses, policy):
+        s = _drive(policy, accesses)
+        # every lookup entry points at a slot holding that row
+        for row, slot in s.lookup.items():
+            assert s.slots[slot] == row
+        # every filled slot has a lookup entry
+        filled = [r for r in s.slots if r is not None]
+        assert sorted(filled) == sorted(s.lookup)
+        assert len(set(filled)) == len(filled)  # no duplicates
+
+    @given(accesses=accesses, policy=st.sampled_from(["SC", "WMC", "BBC"]))
+    @settings(max_examples=150, deadline=None)
+    def test_capacity_never_exceeded(self, accesses, policy):
+        s = _drive(policy, accesses)
+        assert s.occupancy() <= s.capacity
+
+    @given(accesses=accesses)
+    @settings(max_examples=100, deadline=None)
+    def test_dirty_rows_are_cached(self, accesses):
+        s = _drive("SC", accesses)
+        assert s.dirty <= set(s.lookup)
+
+    @given(accesses=accesses)
+    @settings(max_examples=100, deadline=None)
+    def test_scores_nonnegative(self, accesses):
+        s = _drive("BBC", accesses)
+        assert all(v >= 0 for v in s.score.values())
+
+
+class TestSCBehaviour:
+    def test_sc_caches_every_far_access(self):
+        s = _drive("SC", [(1, False), (2, False), (3, False)])
+        assert s.hit(1) and s.hit(2) and s.hit(3)
+
+    def test_sc_lru_eviction(self):
+        seq = [(r, False) for r in (1, 2, 3, 4, 1, 5)]  # cap 4: evicts 2
+        s = _drive("SC", seq)
+        assert s.hit(5) and s.hit(1)
+        assert not s.hit(2)
+
+
+class TestBBCBehaviour:
+    def test_bbc_ignores_one_shot_rows(self):
+        """Streaming rows (single activation) must not trigger migrations."""
+        s = _drive("BBC", [(r, False) for r in range(25)])
+        assert s.occupancy() == 0
+
+    def test_bbc_promotes_reused_rows(self):
+        seq = [(7, False)] * 6 + [(9, False)] * 6
+        s = _drive("BBC", seq)
+        assert s.hit(7) and s.hit(9)
+
+    def test_bbc_prefers_hot_over_cold(self):
+        # fill with moderately-hot rows, then hammer one row; it must displace
+        # the coldest entry.
+        seq = ([(r, False) for r in (1, 2, 3, 4)] * 3
+               + [(10, False)] * 12)
+        s = _drive("BBC", seq)
+        assert s.hit(10)
+
+
+class TestStaticProfile:
+    def test_preload_places_hottest(self):
+        pol = make_policy("STATIC", COSTS)
+        s = CacheState(capacity=2)
+        pol.preload(s, {5: 100, 6: 50, 7: 10})
+        assert s.hit(5) and s.hit(6) and not s.hit(7)
+        d = pol.decide(s, 7, 0.0, bank_idle=True)
+        assert not d.promote

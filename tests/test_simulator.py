@@ -1,0 +1,131 @@
+"""DRAM system simulator tests: paper claims + structural invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core import area, power, simulator as S, timing, traces as T
+
+
+def _run_pair(mix, n=8000, seed=1, policy="BBC", near=32):
+    tr = T.make_mix(mix, n_requests=n, seed=seed)
+    base = S.simulate(S.SimConfig(device=S.DeviceConfig(kind="commodity")), tr)
+    tl = S.simulate(S.SimConfig(
+        device=S.DeviceConfig(kind="tldram", policy=policy, near_rows=near)), tr)
+    return base, tl
+
+
+class TestPaperClaims:
+    def test_hot_workload_improves_ipc(self):
+        base, tl = _run_pair(("hot",))
+        assert tl.cores[0].ipc > base.cores[0].ipc * 1.05
+
+    def test_hot_workload_saves_energy_and_power(self):
+        base, tl = _run_pair(("hot",))
+        assert tl.energy_nj < base.energy_nj
+        assert tl.power_mw < base.power_mw
+
+    def test_near_hit_rate_over_90pct_on_locality_workloads(self):
+        """Paper Sec. 5: 'over 90% on average of requests hit in the rows
+        cached in the near segment' under BBC."""
+        rates = []
+        for m, s in (("hot", 1), ("hot2", 2), ("light", 3)):
+            _, tl = _run_pair((m,), seed=s)
+            rates.append(tl.near_hit_rate)
+        assert np.mean(rates) > 0.90
+
+    def test_short_bitline_device_is_fastest(self):
+        tr = T.make_mix(("hot",), n_requests=6000, seed=0)
+        base = S.simulate(S.SimConfig(device=S.DeviceConfig(kind="commodity")), tr)
+        short = S.simulate(S.SimConfig(
+            device=S.DeviceConfig(kind="short", near_rows=32)), tr)
+        assert short.cores[0].ipc > base.cores[0].ipc
+
+    def test_static_profile_policy_works(self):
+        base, tl = _run_pair(("hot",), policy="STATIC")
+        assert tl.migrations == 0
+        assert tl.near_hit_rate > 0.5
+        assert tl.cores[0].ipc > base.cores[0].ipc
+
+    def test_multicore_runs_and_improves(self):
+        base, tl = _run_pair(("hot", "mixed"), n=5000)
+        assert len(base.cores) == 2
+        assert sum(c.ipc for c in tl.cores) > sum(c.ipc for c in base.cores)
+
+    def test_weighted_speedup(self):
+        tr = T.make_mix(("hot", "mixed"), n_requests=4000, seed=2)
+        cfg = S.SimConfig(device=S.DeviceConfig(kind="commodity"))
+        shared = S.simulate(cfg, tr)
+        alone = S.simulate_alone(cfg, tr)
+        ws = shared.weighted_speedup(alone)
+        assert 0.2 < ws <= 2.0 + 1e-9  # per-core slowdown under sharing
+
+
+class TestISTChannelFree:
+    """Inter-segment transfer occupies the bank, never the channel: accesses
+    to *other* banks proceed during a migration (paper Sec. 4)."""
+
+    def test_migration_does_not_block_other_banks(self):
+        # Two cores, disjoint banks; core0's workload triggers migrations.
+        n = 3000
+        rng = np.random.default_rng(0)
+        hot = T.Trace(
+            gaps=np.full(n, 10), banks=np.zeros(n, dtype=np.int64),
+            subarrays=np.zeros(n, dtype=np.int64),
+            rows=rng.integers(0, 8, size=n),
+            writes=np.zeros(n, dtype=bool))
+        other = T.Trace(
+            gaps=np.full(n, 10), banks=np.full(n, 3, dtype=np.int64),
+            subarrays=np.zeros(n, dtype=np.int64),
+            rows=rng.integers(0, 8, size=n),
+            writes=np.zeros(n, dtype=bool))
+        cfg_tl = S.SimConfig(device=S.DeviceConfig(kind="tldram", policy="SC"))
+        both = S.simulate(cfg_tl, [hot, other])
+        assert both.migrations > 0
+        solo = S.simulate(cfg_tl, [other])
+        # Core on bank 3 is unaffected by migrations on bank 0 beyond generic
+        # channel sharing: its IPC stays within 15% of running alone.
+        assert both.cores[1].ipc > solo.cores[0].ipc * 0.85
+
+    def test_ist_duration_matches_paper(self):
+        near, far = timing.tldram_timings(32)
+        assert timing.ist_duration_ns(far) == pytest.approx(far.t_rc + 4.0)
+
+
+class TestDeterminism:
+    def test_same_seed_same_result(self):
+        a = _run_pair(("mixed",), n=2000, seed=7)[1]
+        b = _run_pair(("mixed",), n=2000, seed=7)[1]
+        assert a.energy_nj == b.energy_nj
+        assert [c.ipc for c in a.cores] == [c.ipc for c in b.cores]
+
+
+class TestPowerModel:
+    def test_table1_power_row(self):
+        p = power.table1_power_norm()
+        assert p["short_32"] == pytest.approx(0.51, abs=0.005)
+        assert p["long_512"] == pytest.approx(1.00, abs=0.005)
+        assert p["near_32"] == pytest.approx(0.51, abs=0.005)
+        assert p["far_480"] == pytest.approx(1.49, abs=0.005)
+
+
+class TestAreaModel:
+    def test_table1_area_row(self):
+        a = area.table1_area_norm()
+        assert a["short_32"] == pytest.approx(3.76, abs=0.005)
+        assert a["long_512"] == pytest.approx(1.00, abs=0.005)
+        assert a["segmented"] == pytest.approx(1.03, abs=0.005)
+
+    def test_area_decreases_with_cells_per_bitline(self):
+        areas = [area.die_area_norm(n) for n in (32, 64, 128, 256, 512)]
+        assert areas == sorted(areas, reverse=True)
+
+
+class TestEnergyAccounting:
+    def test_energy_components_positive_and_sum(self):
+        _, tl = _run_pair(("hot",), n=3000)
+        assert tl.energy_nj > 0
+        assert tl.migrations >= 0
+        acts = sum(tl.acts_by_class.values())
+        assert acts > 0
+        # every request either hit in near or was a far access
+        assert tl.near_hits + tl.far_accesses == 3000

@@ -1,0 +1,210 @@
+"""Tiered-memory runtime tests: partition exactness, BBC equivalence with the
+DRAM-simulator policy, channel-free migration (no collectives), hit rates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import tier_policy, tiered_embedding as te, tiered_kv as tkv
+from repro.core.policies import CacheState, PolicyCosts, make_policy
+from repro.kernels import ref
+
+
+def _mk_cache(B=2, T=512, Hkv=2, hd=32, page=64, near_pages=3, seed=0):
+    cfg = tkv.TieredKVConfig(page=page, near_pages=near_pages, interval=8,
+                             max_promotions=2)
+    ks = jax.random.split(jax.random.key(seed), 2)
+    k = jax.random.normal(ks[0], (B, T, Hkv, hd), jnp.float32) * 0.5
+    v = jax.random.normal(ks[1], (B, T, Hkv, hd), jnp.float32) * 0.5
+    return tkv.init_tiered_cache(k, v, cfg), cfg
+
+
+class TestTieredKV:
+    def test_attention_matches_monolithic_before_and_after_migration(self):
+        """The core invariant: two-tier attention == plain attention over the
+        full cache, regardless of what BBC promoted."""
+        cache, cfg = _mk_cache()
+        B, T, Hkv, hd = cache["far_k"].shape
+        H = Hkv * 2
+        q = jax.random.normal(jax.random.key(7), (B, H, hd), jnp.float32)
+        pos = jnp.asarray(T // 2 + 17, jnp.int32)
+
+        want = ref.decode_attention_ref(
+            q[:, None], cache["far_k"], cache["far_v"],
+            jnp.full((B,), pos, jnp.int32))[:, 0]
+
+        got0 = tkv.tiered_attention(cache, q, pos, cfg)
+        np.testing.assert_allclose(np.asarray(got0), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+        # drive several BBC intervals, then check again
+        for _ in range(4):
+            cache = tkv.plan_and_migrate(cache, q, pos, cfg)
+        assert int(cache["migrations"]) > 0, "BBC should promote hot pages"
+        got1 = tkv.tiered_attention(cache, q, pos, cfg)
+        np.testing.assert_allclose(np.asarray(got1), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_promotes_high_mass_pages(self):
+        """Pages receiving most attention mass must end up in the near tier."""
+        cache, cfg = _mk_cache(seed=1)
+        B, T, Hkv, hd = cache["far_k"].shape
+        H = Hkv * 2
+        # concentrate attention on page 1: make its keys parallel to q
+        q = jnp.ones((B, H, hd), jnp.float32)
+        hot = slice(1 * cfg.page, 2 * cfg.page)
+        far_k = cache["far_k"].at[:, hot].set(3.0)
+        cache["far_k"] = far_k
+        pos = jnp.asarray(T, jnp.int32) - 1
+        for _ in range(4):
+            cache = tkv.plan_and_migrate(cache, q, pos, cfg)
+        assert bool((cache["slot_of_page"][:, 1] >= 0).all()), \
+            cache["slot_of_page"]
+
+    def test_migration_emits_no_collectives(self):
+        """IST analogue: the migration program must contain zero collective
+        ops (the paper's channel-free property)."""
+        cache, cfg = _mk_cache()
+        B, T, Hkv, hd = cache["far_k"].shape
+        q = jnp.ones((B, Hkv * 2, hd), jnp.float32)
+        pos = jnp.asarray(T - 1, jnp.int32)
+        hlo = jax.jit(
+            lambda c, q, p: tkv.plan_and_migrate(c, q, p, cfg)
+        ).lower(cache, q, pos).compile().as_text()
+        for op in ("all-reduce", "all-gather", "all-to-all",
+                   "collective-permute", "reduce-scatter"):
+            assert op not in hlo, f"migration HLO contains {op}"
+
+    def test_append_token(self):
+        cache, cfg = _mk_cache()
+        B, T, Hkv, hd = cache["far_k"].shape
+        k_new = jnp.full((B, 1, Hkv, hd), 9.0)
+        cache2 = tkv.append_token(cache, k_new, k_new, jnp.asarray(5))
+        np.testing.assert_allclose(cache2["far_k"][:, 5], 9.0)
+        np.testing.assert_allclose(cache2["far_k"][:, 4],
+                                   cache["far_k"][:, 4])
+
+
+class TestVectorizedBBCEquivalence:
+    def test_matches_object_policy_on_shared_trace(self):
+        """The vectorized BBC and the DRAM simulator's object BBC make the
+        same promotion decisions on the same activation stream."""
+        costs_obj = PolicyCosts(near_cost=1.0, far_cost=4.0, migrate_cost=3.0)
+        costs_vec = tier_policy.TierCosts(
+            near_cost=1.0, far_cost=4.0, migrate_cost=3.0, hysteresis=2.0,
+            min_score=2.0, decay=0.9)
+        N, C = 32, 4
+        rng = np.random.default_rng(0)
+        # Zipfian activation stream over N rows, processed in intervals.
+        ranks = np.arange(1, N + 1)
+        p = ranks ** -1.5
+        p /= p.sum()
+        stream = rng.choice(N, size=400, p=p)
+
+        # object policy (decide per access, like the DRAM controller)
+        pol = make_policy("BBC", costs_obj, decay=0.9)
+        pol.min_score = 2.0
+        st = CacheState(capacity=C)
+        for i, row in enumerate(stream):
+            in_near = st.hit(int(row))
+            pol.on_access(st, int(row), float(i), False, in_near,
+                          activated=True)
+            if not in_near:
+                d = pol.decide(st, int(row), float(i), bank_idle=True)
+                if d.promote:
+                    pol.apply_promotion(st, int(row), d)
+            if i % 16 == 15:
+                pol.decay_scores(st)
+
+        # vectorized policy (interval batches)
+        scores = jnp.zeros((N,), jnp.float32)
+        slot_of = -jnp.ones((N,), jnp.int32)
+        row_of = -jnp.ones((C,), jnp.int32)
+        for start in range(0, 400, 16):
+            batch = stream[start:start + 16]
+            counts = np.bincount(batch, minlength=N).astype(np.float32)
+            scores = tier_policy.ema_update(scores, jnp.asarray(counts),
+                                            costs_vec)
+            rows, slots, valid = tier_policy.plan_promotions(
+                scores, slot_of, row_of, costs_vec, max_promotions=2)
+            slot_of, row_of = tier_policy.apply_promotions(
+                slot_of, row_of, rows, slots, valid)
+
+        vec_cached = set(np.asarray(row_of)[np.asarray(row_of) >= 0].tolist())
+        obj_cached = set(st.lookup.keys())
+        # Both must capture the Zipf head; demand >= 50% agreement and that
+        # the single hottest row is cached by both.
+        assert 0 in vec_cached and 0 in obj_cached
+        overlap = len(vec_cached & obj_cached) / max(len(obj_cached), 1)
+        assert overlap >= 0.5, (vec_cached, obj_cached)
+
+    def test_mapping_arrays_stay_consistent(self):
+        N, C = 16, 3
+        costs = tier_policy.TierCosts(1.0, 4.0, 2.0, min_score=1.0)
+        scores = jnp.zeros((N,), jnp.float32)
+        slot_of = -jnp.ones((N,), jnp.int32)
+        row_of = -jnp.ones((C,), jnp.int32)
+        rng = np.random.default_rng(1)
+        for step in range(30):
+            counts = np.zeros(N, np.float32)
+            counts[rng.integers(0, N, 6)] += 2.0
+            scores = tier_policy.ema_update(scores, jnp.asarray(counts), costs)
+            rows, slots, valid = tier_policy.plan_promotions(
+                scores, slot_of, row_of, costs, 2)
+            slot_of, row_of = tier_policy.apply_promotions(
+                slot_of, row_of, rows, slots, valid)
+            so, ro = np.asarray(slot_of), np.asarray(row_of)
+            for slot, row in enumerate(ro):
+                if row >= 0:
+                    assert so[row] == slot
+            cached_rows = [r for r in range(N) if so[r] >= 0]
+            for r in cached_rows:
+                assert ro[so[r]] == r
+            assert len(cached_rows) == len({so[r] for r in cached_rows})
+
+
+class TestTieredEmbedding:
+    def test_lookup_exact(self):
+        cfg = te.TieredEmbeddingConfig(near_rows=8, max_promotions=4)
+        V, D = 64, 16
+        table = jax.random.normal(jax.random.key(0), (V, D), jnp.float32)
+        state = te.init_state(table, cfg)
+        toks = jnp.asarray([3, 5, 3, 60, 1], jnp.int32)
+        out, hits = te.lookup(table, state, toks)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(table[toks]),
+                                   rtol=1e-6)
+        assert not bool(hits.any())  # nothing promoted yet
+
+    def test_zipf_stream_reaches_high_hit_rate(self):
+        cfg = te.TieredEmbeddingConfig(near_rows=32, max_promotions=16)
+        V, D = 1024, 8
+        table = jax.random.normal(jax.random.key(1), (V, D), jnp.float32)
+        state = te.init_state(table, cfg)
+        rng = np.random.default_rng(2)
+        ranks = np.arange(1, V + 1)
+        p = ranks ** -1.4
+        p /= p.sum()
+        for _ in range(20):
+            toks = jnp.asarray(rng.choice(V, size=256, p=p), jnp.int32)
+            state = te.record_and_migrate(table, state, toks, cfg)
+        toks = jnp.asarray(rng.choice(V, size=512, p=p), jnp.int32)
+        out, hits = te.lookup(table, state, toks)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(table[toks]),
+                                   rtol=1e-6)
+        assert float(hits.mean()) > 0.6, float(hits.mean())
+        assert int(state["migrations"]) > 0
+
+    def test_refresh_after_table_update(self):
+        cfg = te.TieredEmbeddingConfig(near_rows=4, max_promotions=4)
+        V, D = 32, 4
+        table = jnp.ones((V, D))
+        state = te.init_state(table, cfg)
+        toks = jnp.asarray([2, 2, 2, 9, 9, 9], jnp.int32)
+        for _ in range(3):
+            state = te.record_and_migrate(table, state, toks, cfg)
+        table2 = table * 5.0
+        state = te.refresh(table2, state)
+        out, hits = te.lookup(table2, state, toks)
+        np.testing.assert_allclose(np.asarray(out), 5.0)
+        assert bool(hits.all())

@@ -1,0 +1,108 @@
+"""Circuit-model tests: Table 1 anchors and every Fig. 5/6/7 trend."""
+
+import numpy as np
+import pytest
+
+from repro.core import tldram
+
+
+TOL = 0.02  # 2% on calibrated anchors
+
+
+class TestTable1:
+    def test_trc_anchors(self):
+        model = tldram.table1_model(calibrated=True)
+        for name, target in tldram.TABLE1_TRC_NS.items():
+            assert model[name].t_rc == pytest.approx(target, rel=TOL), name
+
+    def test_trcd_anchors(self):
+        model = tldram.table1_model(calibrated=True)
+        assert model["long_512"].t_rcd == pytest.approx(13.75, rel=TOL)
+        assert model["short_32"].t_rcd == pytest.approx(8.0, rel=TOL)
+
+    def test_far_trcd_reduced_tras_increased(self):
+        """Paper Sec. 3: 'tRCD for the far segment is reduced while its tRAS
+        is increased' (relative to the unsegmented long bitline)."""
+        model = tldram.table1_model(calibrated=True)
+        assert model["far_480"].t_rcd < model["long_512"].t_rcd
+        assert model["far_480"].t_ras > model["long_512"].t_ras
+        assert model["far_480"].t_rp > model["long_512"].t_rp
+
+    def test_near_matches_short(self):
+        """The near segment is electrically a short bitline (+ iso junction)."""
+        model = tldram.table1_model(calibrated=True)
+        assert model["near_32"].t_rc == pytest.approx(model["short_32"].t_rc,
+                                                      rel=0.03)
+
+
+class TestFig5Trends:
+    """The three conclusions the paper draws from Figs. 5a/5b."""
+
+    @pytest.fixture(scope="class")
+    def sweep(self):
+        return tldram.segment_length_sweep(near_lengths=(16, 32, 64, 128, 256))
+
+    def test_shorter_near_is_faster(self, sweep):
+        lengths = sorted(sweep["near"])
+        trcs = [sweep["near"][n].t_rc for n in lengths]
+        trcds = [sweep["near"][n].t_rcd for n in lengths]
+        assert trcs == sorted(trcs)
+        assert trcds == sorted(trcds)
+
+    def test_longer_far_has_lower_trcd(self, sweep):
+        lengths = sorted(sweep["far"])
+        trcds = [sweep["far"][n].t_rcd for n in lengths]
+        assert trcds == sorted(trcds, reverse=True)
+
+    def test_shorter_far_has_lower_trc(self, sweep):
+        lengths = sorted(sweep["far"])
+        trcs = [sweep["far"][n].t_rc for n in lengths]
+        assert trcs == sorted(trcs)
+
+
+class TestWaveforms:
+    """Fig. 6/7 dynamics."""
+
+    def test_near_tracks_short_bitline(self):
+        m = tldram.BitlineModel()
+        near = m.activation_waveform(32, 480, access_far=False)
+        short = m.activation_waveform(32, None, access_far=False)
+        n = min(len(near.v_near), len(short.v_near))
+        np.testing.assert_allclose(near.v_near[:n], short.v_near[:n], atol=0.02)
+
+    def test_far_segment_lags_near_node(self):
+        """Fig. 6b: through the iso FET, far voltage rises more slowly than
+        the sense-amp (near) node once amplification starts."""
+        m = tldram.BitlineModel()
+        wf = m.activation_waveform(32, 480, access_far=True)
+        p = m.p
+        sa_on = int(p.t_share_ns / p.dt_ns)
+        late = slice(sa_on + 200, sa_on + 2000)
+        assert np.all(wf.v_near[late] >= wf.v_far[late] - 1e-9)
+
+    def test_voltages_bounded(self):
+        m = tldram.BitlineModel()
+        for access_far in (False, True):
+            wf = m.activation_waveform(32, 480, access_far=access_far)
+            assert np.all(wf.v_near <= m.p.vdd + 1e-6)
+            assert np.all(wf.v_near >= 0.5 * m.p.vdd - 1e-6)
+
+    def test_precharge_settles_to_half_vdd(self):
+        p = tldram.CircuitParams()
+        wf = tldram._euler_precharge(p, c_near=p.c_bl(512), c_far=None,
+                                     t_max_ns=400.0)
+        assert wf.v_near[-1] == pytest.approx(0.5 * p.vdd, rel=0.01)
+
+
+class TestMonotonicity:
+    def test_unsegmented_latency_increases_with_cells(self):
+        prev = 0.0
+        for cells in (32, 64, 128, 256, 512):
+            t = tldram.calibrated_timings("unsegmented", cells)
+            assert t.t_rc > prev
+            prev = t.t_rc
+
+    def test_far_slower_than_long_for_same_total(self):
+        far = tldram.calibrated_timings("far", 480, 32)
+        long_ = tldram.calibrated_timings("unsegmented", 512)
+        assert far.t_rc > long_.t_rc
