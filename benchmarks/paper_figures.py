@@ -13,7 +13,7 @@ import numpy as np
 from repro.core import area, power, simulator as S, tldram, traces as T
 
 # Suites used for Fig 8 (the paper's high-locality SPEC-like regime) — see
-# DESIGN.md Sec. 2a: traces are synthetic calibrated mixes.
+# docs/design.md Sec. 2a: traces are synthetic calibrated mixes.
 SUITE_1CORE = [("hot", 1), ("hot", 2), ("hot2", 3), ("hot2", 4),
                ("mixed", 5), ("mixed", 6), ("light", 7), ("hot", 8)]
 SUITE_2CORE = [(("hot", "mixed"), 1), (("hot2", "hot"), 2),

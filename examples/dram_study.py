@@ -5,8 +5,12 @@ Fig 8 (IPC/power, 1/2/4-core under BBC), and the Fig 9 capacity sweep.
 """
 
 import argparse
+import sys
+from pathlib import Path
 
-from benchmarks import paper_figures
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))  # benchmarks/
+
+from benchmarks import paper_figures  # noqa: E402
 
 
 def main():
@@ -32,6 +36,11 @@ def main():
               f"energy {r[4]:+.1f}%  near-hit {r[5]:.2f}")
     print("   paper:   1-core +12.8% / 2-core +12.3% / 4-core +11.0% IPC; "
           "power -23.6/-26.4/-28.6%")
+
+    print("\n== Sec 5: policy comparison (one repro.tier engine) ==")
+    for r in paper_figures.fig8_policy_comparison(n_requests=n):
+        print(f"  {r[1]:7s}: IPC {r[2]:+.1f}%  near-hit {r[3]:.2f}")
+    print("   BBC wins overall: SC/WMC thrash on the streaming workload")
 
     print("\n== Fig 9: near-segment capacity sweep ==")
     for r in paper_figures.fig9_capacity_sweep(n_requests=n):

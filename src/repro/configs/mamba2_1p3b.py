@@ -2,7 +2,7 @@
 
 [arXiv:2405.21060; unverified] 48L d_model=2048, d_inner=2*d_model, 64 SSD
 heads of dim 64, ssm_state=128, vocab=50280.  O(1) decode state: the TL-DRAM
-KV-tier mechanism is inapplicable (no KV cache exists) — see DESIGN.md
+KV-tier mechanism is inapplicable (no KV cache exists) — see docs/design.md
 §Arch-applicability.
 """
 

@@ -1,228 +1,24 @@
-"""Near-segment management policies (paper Sec. 4 / HPCA'13 Sec. 5).
+"""Compatibility shim — the near-segment policies now live in ``repro.tier``.
 
-The near segment is a cache for far-segment rows.  Three policies from the
-paper, plus the OS-exposed static-profile mechanism:
-
-  SC  (Simple Caching)        : cache every accessed far row, LRU eviction.
-  WMC (Wait-Minimized Caching): like SC, but migrate only when the bank is
-       otherwise idle, so the inter-segment transfer never delays a pending
-       request.
-  BBC (Benefit-Based Caching) : promote a far row only when its expected
-       benefit (decayed access frequency x latency saved per access) exceeds
-       the victim's retained benefit plus the amortized migration cost.
-       The paper's best policy.
-  STATIC (OS-exposed)         : profile-driven placement of the hottest rows
-       at t=0; no runtime migration (the paper's second approach, where the
-       near segment capacity is exposed to the OS).
-
-This module is deliberately framework-agnostic: the DRAM timing simulator
-(`repro.core.simulator`) drives it with nanosecond costs, and the TPU tiered
-runtime (`repro.core.tiered_store`) drives it with modeled byte costs.  One
-policy implementation, two substrates — mirroring how the paper's mechanism
-is independent of what the "rows" contain.
+The object/dict implementations formerly defined here moved verbatim to
+`repro.tier.reference`, where they serve as the parity oracle for the
+vectorized engines (`repro.tier.engine` for the DRAM simulator's nanosecond
+substrate, `repro.tier.jax_engine` for the TPU runtime — the tiered KV cache
+in `repro.core.tiered_kv` and the tiered embedding in
+`repro.core.tiered_embedding`).  See docs/tier.md.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-
-
-@dataclass
-class PolicyCosts:
-    """Latency landscape the policy optimizes over (units are caller's)."""
-
-    near_cost: float        # cost of one near-segment access
-    far_cost: float         # cost of one far-segment access
-    migrate_cost: float     # cost of one inter-segment transfer (IST)
-
-    @property
-    def saving_per_access(self) -> float:
-        return self.far_cost - self.near_cost
-
-
-@dataclass
-class CacheState:
-    """Near-segment cache state for one subarray (or one tier group)."""
-
-    capacity: int
-    # slot -> cached far row id (dense list, None = empty slot)
-    slots: list[int | None] = field(default_factory=list)
-    # far row id -> slot
-    lookup: dict[int, int] = field(default_factory=dict)
-    dirty: set[int] = field(default_factory=set)        # far row ids
-    last_use: dict[int, float] = field(default_factory=dict)   # row -> time
-    score: dict[int, float] = field(default_factory=dict)      # row -> decayed freq
-
-    def __post_init__(self):
-        if not self.slots:
-            self.slots = [None] * self.capacity
-
-    def hit(self, row: int) -> bool:
-        return row in self.lookup
-
-    def occupancy(self) -> int:
-        return len(self.lookup)
-
-
-@dataclass
-class Decision:
-    """What the controller should do after serving an access."""
-
-    promote: bool = False
-    victim_row: int | None = None     # far row to evict (None if empty slot)
-    victim_dirty: bool = False        # eviction needs a write-back IST
-    slot: int | None = None
-
-
-class Policy:
-    """Base class; subclasses implement ``decide``."""
-
-    name = "base"
-
-    def __init__(self, costs: PolicyCosts, decay: float = 0.95):
-        self.costs = costs
-        self.decay = decay
-
-    # -- bookkeeping shared by all policies --------------------------------
-
-    def on_access(self, st: CacheState, row: int, now: float,
-                  is_write: bool, in_near: bool,
-                  activated: bool = True) -> None:
-        st.last_use[row] = now
-        # The near segment saves latency/energy per ACTIVATION, not per column
-        # access: row-buffer hits are free either way.  Score activations only.
-        if activated:
-            st.score[row] = st.score.get(row, 0.0) + 1.0
-        if in_near and is_write:
-            st.dirty.add(row)
-
-    def decay_scores(self, st: CacheState) -> None:
-        for k in list(st.score):
-            st.score[k] *= self.decay
-            if st.score[k] < 1e-3:
-                del st.score[k]
-
-    def apply_promotion(self, st: CacheState, row: int, d: Decision) -> None:
-        if d.victim_row is not None:
-            slot = st.lookup.pop(d.victim_row)
-            st.dirty.discard(d.victim_row)
-        else:
-            slot = d.slot if d.slot is not None else st.slots.index(None)
-        st.slots[slot] = row
-        st.lookup[row] = slot
-
-    # -- policy decision -----------------------------------------------------
-
-    def decide(self, st: CacheState, row: int, now: float,
-               bank_idle: bool) -> Decision:
-        raise NotImplementedError
-
-    # -- helpers ------------------------------------------------------------
-
-    def _lru_victim(self, st: CacheState) -> tuple[int | None, int | None]:
-        """Returns (victim_row, slot). victim_row None => an empty slot exists."""
-        if st.occupancy() < st.capacity:
-            return None, st.slots.index(None)
-        victim = min(st.lookup, key=lambda r: st.last_use.get(r, 0.0))
-        return victim, st.lookup[victim]
-
-    def _min_benefit_victim(self, st: CacheState) -> tuple[int | None, int | None]:
-        if st.occupancy() < st.capacity:
-            return None, st.slots.index(None)
-        victim = min(st.lookup, key=lambda r: st.score.get(r, 0.0))
-        return victim, st.lookup[victim]
-
-
-class SimpleCaching(Policy):
-    """SC: cache every far-row access (LRU)."""
-
-    name = "SC"
-
-    def decide(self, st, row, now, bank_idle):
-        victim, slot = self._lru_victim(st)
-        return Decision(promote=True, victim_row=victim,
-                        victim_dirty=victim in st.dirty if victim is not None else False,
-                        slot=slot)
-
-
-class WaitMinimizedCaching(Policy):
-    """WMC: cache only when the migration cannot delay pending requests."""
-
-    name = "WMC"
-
-    def decide(self, st, row, now, bank_idle):
-        if not bank_idle:
-            return Decision(promote=False)
-        victim, slot = self._lru_victim(st)
-        return Decision(promote=True, victim_row=victim,
-                        victim_dirty=victim in st.dirty if victim is not None else False,
-                        slot=slot)
-
-
-class BenefitBasedCaching(Policy):
-    """BBC: promote when expected benefit exceeds victim benefit + cost.
-
-    benefit(row) = decayed_access_frequency(row) * saving_per_access
-    promote iff benefit(candidate) > benefit(victim) + migrate_cost_amortized
-    """
-
-    name = "BBC"
-
-    def __init__(self, costs: PolicyCosts, decay: float = 0.95,
-                 hysteresis: float = 2.0, min_score: float = 2.0):
-        super().__init__(costs, decay)
-        self.hysteresis = hysteresis
-        # A row must show *sustained* reuse (several decayed activations)
-        # before it is worth a migration: one or two activations predict
-        # nothing under streaming/uniform traffic (paper samples activation
-        # counts per interval for the same reason).
-        self.min_score = min_score
-
-    def decide(self, st, row, now, bank_idle):
-        score = st.score.get(row, 0.0)
-        if score < self.min_score:
-            return Decision(promote=False)
-        cand_benefit = score * self.costs.saving_per_access
-        victim, slot = self._min_benefit_victim(st)
-        if victim is None:
-            # Empty slot: promote if the row simply pays for its migration.
-            if cand_benefit > self.costs.migrate_cost:
-                return Decision(promote=True, victim_row=None, slot=slot)
-            return Decision(promote=False)
-        victim_benefit = st.score.get(victim, 0.0) * self.costs.saving_per_access
-        extra = self.costs.migrate_cost * (2.0 if victim in st.dirty else 1.0)
-        if cand_benefit > victim_benefit + extra * self.hysteresis:
-            return Decision(promote=True, victim_row=victim,
-                            victim_dirty=victim in st.dirty, slot=slot)
-        return Decision(promote=False)
-
-
-class StaticProfile(Policy):
-    """OS-exposed mechanism: hottest rows placed at t=0, no runtime migration.
-
-    ``preload`` must be called with profiled per-row access counts before the
-    run (the OS's static/dynamic profiling step in the paper).
-    """
-
-    name = "STATIC"
-
-    def preload(self, st: CacheState, row_counts: dict[int, int]) -> None:
-        hottest = sorted(row_counts, key=row_counts.get, reverse=True)
-        for slot, row in enumerate(hottest[: st.capacity]):
-            st.slots[slot] = row
-            st.lookup[row] = slot
-
-    def decide(self, st, row, now, bank_idle):
-        return Decision(promote=False)
-
-
-POLICIES: dict[str, type[Policy]] = {
-    "SC": SimpleCaching,
-    "WMC": WaitMinimizedCaching,
-    "BBC": BenefitBasedCaching,
-    "STATIC": StaticProfile,
-}
-
-
-def make_policy(name: str, costs: PolicyCosts, **kw) -> Policy:
-    return POLICIES[name.upper()](costs, **kw)
+from repro.tier.reference import (  # noqa: F401
+    POLICIES,
+    BenefitBasedCaching,
+    CacheState,
+    Decision,
+    Policy,
+    PolicyCosts,
+    SimpleCaching,
+    StaticProfile,
+    WaitMinimizedCaching,
+    make_policy,
+)

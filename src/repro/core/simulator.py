@@ -4,7 +4,9 @@ Reproduces the evaluation methodology of the paper (Sec. 5): trace-driven
 cores with a limited run-ahead window (MLP) issue cache-line requests to a
 shared memory controller (FR-FCFS, open-row policy) over one channel and
 multiple banks; each bank's subarrays optionally carry a TL-DRAM near-segment
-cache managed by one of the policies in ``repro.core.policies``.
+cache managed by one of the four policies in ``repro.tier`` (SC / WMC / BBC /
+STATIC), driven through the vectorized `repro.tier.engine.TierEngine` whose
+state is batched across the whole bank x subarray grid.
 
 Fidelity notes (deliberate simplifications, standard for lightweight sims):
   * request-granular bank serialization (per-bank command pipelining is folded
@@ -27,7 +29,7 @@ from typing import Callable
 import numpy as np
 
 from repro.core import power, timing
-from repro.core.policies import CacheState, Policy, PolicyCosts, make_policy
+from repro.tier import TierCosts, TierEngine
 
 CPU_GHZ = 3.2
 ISSUE_WIDTH = 4
@@ -160,6 +162,14 @@ class _Core:
     outstanding: list = field(default_factory=list)  # FIFO of request ids
     done: bool = False
     stats: CoreStats = field(default_factory=CoreStats)
+    # Trace columns as Python lists: the controller touches them per request
+    # (FR-FCFS scans classify up to 16 queued requests per serve), and list
+    # indexing is ~5x cheaper than NumPy scalar extraction.
+    gaps_l: list = field(default_factory=list)
+    groups_l: list = field(default_factory=list)  # bank*subarrays + subarray
+    subs_l: list = field(default_factory=list)
+    rows_l: list = field(default_factory=list)
+    writes_l: list = field(default_factory=list)
 
 
 class _Event:
@@ -201,43 +211,60 @@ class DRAMSystem:
         self.e_far = power.far_access_energy(dev.near_rows, far_cells)
         self.e_ist = power.ist_energy_nj(dev.near_rows, far_cells)
 
-        # TL-DRAM per-subarray cache state + one policy instance.
+        # TL-DRAM near-segment state: one vectorized engine batched across
+        # the whole bank x subarray grid (group g = bank * subarrays + s).
         if dev.kind == "tldram":
-            costs = PolicyCosts(near_cost=self.ts_near.t_rc,
-                                far_cost=self.ts_far.t_rc,
-                                migrate_cost=self.ist_ns)
-            self.policy: Policy | None = make_policy(dev.policy, costs)
-            self.caches = {
-                (b, s): CacheState(capacity=dev.near_rows)
-                for b in range(dev.banks)
-                for s in range(dev.subarrays_per_bank)
-            }
-            self._accesses_since_decay = dict.fromkeys(self.caches, 0)
+            costs = TierCosts(near_cost=self.ts_near.t_rc,
+                              far_cost=self.ts_far.t_rc,
+                              migrate_cost=self.ist_ns)
+            # rows = total_rows (not addressable_rows): trace generators may
+            # address the full far row space regardless of the near-segment
+            # capacity sweep (the old dict state was unbounded the same way).
+            self.tier: TierEngine | None = TierEngine(
+                dev.policy, costs,
+                groups=dev.banks * dev.subarrays_per_bank,
+                rows=dev.total_rows, capacity=dev.near_rows,
+                decay_period=cfg.policy_decay_period)
         else:
-            self.policy = None
-            self.caches = {}
+            self.tier = None
 
         self.cores = [_Core(trace=t) for t in traces]
         for c in self.cores:
             c.stats.requests = len(c.trace)
             c.stats.instructions = int(c.trace.gaps.sum()) + len(c.trace)
+            t = c.trace
+            c.gaps_l = t.gaps.tolist()
+            c.groups_l = (t.banks * dev.subarrays_per_bank
+                          + t.subarrays).tolist()
+            c.subs_l = t.subarrays.tolist()
+            c.rows_l = t.rows.tolist()
+            c.writes_l = t.writes.tolist()
         # Request bookkeeping: flat arrays indexed by (core, idx).
         self.req_issue_ns: dict[tuple[int, int], float] = {}
 
-        if self.policy is not None and self.policy.name == "STATIC":
+        if self.tier is not None and self.tier.policy == "STATIC":
             self._static_preload()
 
     # -- static profiling (OS-exposed mechanism) ----------------------------
 
+    def _group(self, bank: int, subarray: int) -> int:
+        return bank * self.dev.subarrays_per_bank + subarray
+
     def _static_preload(self):
-        counts: dict[tuple, dict[int, int]] = {k: {} for k in self.caches}
+        """Whole-trace profile (counts + first occurrence per row), built
+        vectorized and handed to the engine's t=0 placement."""
+        G, N = self.tier.G, self.tier.N
+        counts = np.zeros((G, N))
+        first = np.full((G, N), np.iinfo(np.int64).max, np.int64)
+        offset = 0
         for core in self.cores:
             t = core.trace
-            for b, s, r in zip(t.banks, t.subarrays, t.rows):
-                d = counts[(int(b), int(s))]
-                d[int(r)] = d.get(int(r), 0) + 1
-        for key, st in self.caches.items():
-            self.policy.preload(st, counts[key])
+            g = t.banks * self.dev.subarrays_per_bank + t.subarrays
+            np.add.at(counts, (g, t.rows), 1.0)
+            np.minimum.at(first, (g, t.rows),
+                          offset + np.arange(len(t), dtype=np.int64))
+            offset += len(t)
+        self.tier.preload(counts, first)
 
     # -- event plumbing -----------------------------------------------------
 
@@ -251,7 +278,7 @@ class DRAMSystem:
         core = self.cores[ci]
         while (core.ptr < len(core.trace)
                and len(core.outstanding) < self.cfg.mlp):
-            gap = float(core.trace.gaps[core.ptr])
+            gap = core.gaps_l[core.ptr]
             issue = max(core.clock_ns + gap / ISSUE_WIDTH / CPU_GHZ, now)
             core.clock_ns = issue
             rid = (ci, core.ptr)
@@ -272,19 +299,19 @@ class DRAMSystem:
 
     # -- controller ------------------------------------------------------------
 
-    def _classify(self, rid) -> tuple[str, tuple, timing.TimingSet, CacheState | None]:
-        """Access class, open-row key, timings, cache state for a request."""
+    def _classify(self, rid) -> tuple[str, tuple, timing.TimingSet, int]:
+        """Access class, open-row key, timings, tier group for a request."""
         ci, idx = rid
-        t = self.cores[ci].trace
-        b, s, r = int(t.banks[idx]), int(t.subarrays[idx]), int(t.rows[idx])
-        if self.dev.kind == "commodity":
-            return "normal", ("row", s, r), self.ts_normal, None
-        if self.dev.kind == "short":
-            return "short", ("row", s, r), self.ts_normal, None
-        st = self.caches[(b, s)]
-        if st.hit(r):
-            return "near", ("near", s, st.lookup[r]), self.ts_near, st
-        return "far", ("far", s, r), self.ts_far, st
+        core = self.cores[ci]
+        s, r = core.subs_l[idx], core.rows_l[idx]
+        if self.tier is None:
+            cls = "normal" if self.dev.kind == "commodity" else "short"
+            return cls, ("row", s, r), self.ts_normal, -1
+        g = core.groups_l[idx]
+        slot = self.tier.slot(g, r)
+        if slot >= 0:
+            return "near", ("near", s, slot), self.ts_near, g
+        return "far", ("far", s, r), self.ts_far, g
 
     def _select(self, bank: _Bank) -> int:
         """FR-FCFS: oldest row-hit first, else oldest (with an age cap the
@@ -303,10 +330,10 @@ class DRAMSystem:
         rid = self._select(bank)
         bank.busy = True
 
-        cls, key, ts, st = self._classify(rid)
+        cls, key, ts, g = self._classify(rid)
         ci, idx = rid
-        trace = self.cores[ci].trace
-        is_write = bool(trace.writes[idx])
+        core = self.cores[ci]
+        is_write = core.writes_l[idx]
 
         activated = bank.open_key != key
         if not activated:
@@ -338,23 +365,19 @@ class DRAMSystem:
 
         # Policy hooks (TL-DRAM only).
         busy_until = data_end
-        if st is not None:
-            b, s, r = (int(trace.banks[idx]), int(trace.subarrays[idx]),
-                       int(trace.rows[idx]))
+        if g >= 0:
+            r = core.rows_l[idx]
             in_near = cls == "near"
-            self.policy.on_access(st, r, data_end, is_write, in_near,
-                                  activated=activated)
-            keyc = (b, s)
-            self._accesses_since_decay[keyc] += 1
-            if self._accesses_since_decay[keyc] >= self.cfg.policy_decay_period:
-                self._accesses_since_decay[keyc] = 0
-                self.policy.decay_scores(st)
-            if cls == "near":
+            # on_access also runs the group's periodic score decay, matching
+            # the on_access -> decay -> decide order of the old dict layer.
+            self.tier.on_access(g, r, data_end, is_write, in_near,
+                                activated=activated)
+            if in_near:
                 self.result.near_hits += 1
             else:
                 self.result.far_accesses += 1
-                decision = self.policy.decide(st, r, data_end,
-                                              bank_idle=not bank.queue)
+                decision = self.tier.decide(g, r, data_end,
+                                            bank_idle=not bank.queue)
                 if decision.promote:
                     cost = self.ist_ns
                     self.result.migrations += 1
@@ -368,7 +391,7 @@ class DRAMSystem:
                     busy_until = max(busy_until, bank.ready_pre) + cost
                     bank.open_key, bank.open_ts = None, None
                     bank.ready_act = max(bank.ready_act, busy_until)
-                    self.policy.apply_promotion(st, r, decision)
+                    self.tier.apply(g, r, decision)
 
         self._push(busy_until, _Event.BANK_DONE, (bi, rid, data_end))
 
@@ -407,7 +430,7 @@ class DRAMSystem:
             if kind == _Event.ARRIVAL:
                 rid = payload
                 ci, idx = rid
-                bi = int(self.cores[ci].trace.banks[idx])
+                bi = self.cores[ci].groups_l[idx] // self.dev.subarrays_per_bank
                 self.banks[bi].queue.append(rid)
                 self._serve(bi, t)
             elif kind == _Event.BANK_DONE:

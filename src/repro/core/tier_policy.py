@@ -1,110 +1,18 @@
-"""Vectorized (JAX) Benefit-Based Caching — the TPU-runtime twin of
-``repro.core.policies.BenefitBasedCaching``.
+"""Compatibility shim — the vectorized policies now live in ``repro.tier``.
 
-Same decision rule, expressed over fixed-shape arrays so it can run jitted on
-device every promotion interval (the paper's BBC samples activation counts
-per interval in hardware; here the "interval" is N decode steps):
-
-    benefit(row)  = ema_score(row) * saving_per_access
-    promote cand  iff benefit(cand) > benefit(victim) + migrate_cost * hyst
-    victim        = cached row with the minimum retained benefit
-
-``tests/test_tiered_runtime.py::test_vectorized_bbc_matches_object_policy``
-replays the same access stream through both implementations.
+The jittable planning functions formerly defined here (BBC-only) moved to
+`repro.tier.jax_engine` and were generalized to all four paper policies
+(SC / WMC / BBC / STATIC) on top of the shared decision core in
+`repro.tier.rules`; the cost dataclass is the unified
+`repro.tier.costs.TierCosts`.  See docs/tier.md.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-
-import jax
-import jax.numpy as jnp
-
-
-@dataclass(frozen=True)
-class TierCosts:
-    """Cost landscape in abstract units (ns for DRAM, us-per-access-modeled
-    for TPU tiers — only ratios matter)."""
-
-    near_cost: float
-    far_cost: float
-    migrate_cost: float
-    hysteresis: float = 2.0
-    min_score: float = 2.0
-    decay: float = 0.95
-
-    @property
-    def saving(self) -> float:
-        return self.far_cost - self.near_cost
-
-
-def ema_update(scores: jax.Array, activations: jax.Array,
-               costs: TierCosts) -> jax.Array:
-    """scores, activations: (..., N_rows) — decayed activation counts."""
-    return scores * costs.decay + activations
-
-
-def plan_promotions(scores: jax.Array, cached_slot_of_row: jax.Array,
-                    row_of_slot: jax.Array, costs: TierCosts,
-                    max_promotions: int):
-    """One BBC planning step over a row population.
-
-    scores:             (N,) f32 — EMA activation counts per row.
-    cached_slot_of_row: (N,) int32 — near slot per row, -1 if far.
-    row_of_slot:        (C,) int32 — far row per near slot, -1 if empty.
-
-    Returns (promote_rows (K,), victim_slots (K,), valid (K,) bool): the rows
-    to migrate and the slots to place them in; lock-step with the object
-    policy, promotions fill empty slots first, then displace minimum-benefit
-    victims when the margin clears the (hysteresis-scaled) migration cost.
-    """
-    N = scores.shape[0]
-    C = row_of_slot.shape[0]
-    in_near = cached_slot_of_row >= 0
-
-    cand_scores = jnp.where(in_near, -jnp.inf, scores)
-    cand_scores = jnp.where(cand_scores >= costs.min_score, cand_scores,
-                            -jnp.inf)
-    top_scores, top_rows = jax.lax.top_k(cand_scores, max_promotions)
-
-    slot_empty = row_of_slot < 0
-    slot_scores = jnp.where(
-        slot_empty, -jnp.inf,
-        scores[jnp.maximum(row_of_slot, 0)])                 # (C,)
-    # victims: empty slots first (score -inf sorts lowest), then min benefit
-    neg_victim_scores, victim_slots = jax.lax.top_k(-slot_scores,
-                                                    max_promotions)
-    victim_scores = -neg_victim_scores
-    victim_scores = jnp.where(jnp.isinf(victim_scores), 0.0, victim_scores)
-    victim_is_empty = slot_empty[victim_slots]
-
-    cand_benefit = top_scores * costs.saving
-    victim_benefit = victim_scores * costs.saving
-    margin = jnp.where(victim_is_empty, costs.migrate_cost,
-                       victim_benefit + costs.migrate_cost * costs.hysteresis)
-    valid = (cand_benefit > margin) & jnp.isfinite(top_scores)
-    return top_rows, victim_slots, valid
-
-
-def apply_promotions(cached_slot_of_row: jax.Array, row_of_slot: jax.Array,
-                     promote_rows: jax.Array, victim_slots: jax.Array,
-                     valid: jax.Array):
-    """Update the two mapping arrays after a planning step.
-
-    Invalid/sentinel writes are routed to an out-of-bounds index and dropped
-    (note: -1 would *wrap* in JAX indexing, so N/C sentinels are used).
-    """
-    N = cached_slot_of_row.shape[0]
-    C = row_of_slot.shape[0]
-    old_rows = row_of_slot[victim_slots]
-    # evict: clear slot pointers of displaced rows (skip empty slots)
-    evict_idx = jnp.where(valid & (old_rows >= 0), old_rows, N)
-    cached_slot_of_row = cached_slot_of_row.at[evict_idx].set(-1, mode="drop")
-    # place: write new mappings
-    place_rows = jnp.where(valid, promote_rows, N)
-    cached_slot_of_row = cached_slot_of_row.at[place_rows].set(
-        victim_slots, mode="drop")
-    slot_idx = jnp.where(valid, victim_slots, C)
-    row_of_slot = row_of_slot.at[slot_idx].set(
-        jnp.where(valid, promote_rows, -1), mode="drop")
-    return cached_slot_of_row, row_of_slot
+from repro.tier.costs import TierCosts  # noqa: F401
+from repro.tier.jax_engine import (  # noqa: F401
+    apply_promotions,
+    ema_update,
+    plan_promotions,
+    preload_static,
+)

@@ -1,6 +1,6 @@
 """Tiered KV cache: the TL-DRAM near/far substrate applied to decode serving.
 
-Mapping (DESIGN.md Sec. 2b):
+Mapping (docs/design.md §2b):
 
   far tier   : the full KV cache (master copy; new tokens append here) —
                the long-bitline segment.  Gather-addressed => slow path.
@@ -11,10 +11,12 @@ Mapping (DESIGN.md Sec. 2b):
                (`dynamic_update_slice`) — no collectives, no host round-trip,
                mirroring the paper's channel-free inter-segment transfer
                (asserted by tests: migration HLO contains no collective ops).
-  BBC        : every `interval` decode steps, a scoring pass measures per-page
+  policy     : every `interval` decode steps, a scoring pass measures per-page
                attention mass with the current queries (the paper's
                interval-sampled activation counts), EMA-updates page scores,
-               and runs the shared vectorized BBC (`core.tier_policy`).
+               and runs the shared vectorized engine (`repro.tier.jax_engine`)
+               under any of the four paper policies — SC, WMC, BBC (default)
+               or STATIC (profile preload via `preload_static`).
 
 KV pages are immutable once written, so evictions are always clean (the
 paper's dirty-eviction write-back IST never triggers for this workload — a
@@ -31,11 +33,12 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from repro.core.tier_policy import (TierCosts, apply_promotions, ema_update,
-                                    plan_promotions)
+from repro.tier import TierCosts, ema_update
+from repro.tier.jax_engine import (apply_promotions, plan_promotions,
+                                   preload_static)
 from repro.kernels import ops, ref
 
-# Cost model (napkin math, documented in EXPERIMENTS.md): far pages are
+# Cost model (napkin math, documented in docs/experiments.md): far pages are
 # gather-addressed — effective HBM bandwidth for 2KB-grain gathers is ~1/4 of
 # streaming bandwidth on TPU-class memory systems; near pages stream at full
 # bandwidth.  Migration copies a page (read + write) at streaming bandwidth.
@@ -47,8 +50,9 @@ DEFAULT_COSTS = TierCosts(near_cost=1.0, far_cost=4.0, migrate_cost=8.0,
 class TieredKVConfig:
     page: int = 128               # tokens per page
     near_pages: int = 8           # near-tier capacity (pages per sequence)
-    interval: int = 16            # decode steps between BBC planning passes
+    interval: int = 16            # decode steps between planning passes
     max_promotions: int = 2       # migrations per planning pass
+    policy: str = "BBC"           # SC | WMC | BBC | STATIC
     costs: TierCosts = DEFAULT_COSTS
 
 
@@ -66,6 +70,10 @@ def init_tiered_cache(k_cache: jax.Array, v_cache: jax.Array,
         "slot_of_page": -jnp.ones((B, n_pages), jnp.int32),
         "page_of_slot": -jnp.ones((B, C), jnp.int32),
         "scores": jnp.zeros((B, n_pages), jnp.float32),
+        # SC/WMC LRU stamps: planning-interval index of each page's last
+        # nonzero attention mass (BBC/STATIC ignore them).
+        "last_use": jnp.zeros((B, n_pages), jnp.float32),
+        "step": jnp.zeros((), jnp.int32),
         "migrations": jnp.zeros((), jnp.int32),
     }
 
@@ -157,13 +165,39 @@ def page_masses(q: jax.Array, cache: dict, pos: jax.Array,
     return mass.reshape(B, n_pages, cfg.page).sum(-1) / max(H, 1)
 
 
+def _copy_pages(near_k, near_v, far_k, far_v, rows, slots, valid, page: int):
+    """IST analogue: copy up to K far pages into near slots (pure on-device
+    dynamic slices; invalid plan entries are dropped)."""
+
+    def copy_page(i, bufs):
+        nk, nv = bufs
+        src = jnp.where(valid[i], rows[i], 0) * page
+        dst = jnp.where(valid[i], slots[i], 0) * page
+        page_k = jax.lax.dynamic_slice_in_dim(far_k, src, page, 0)
+        page_v = jax.lax.dynamic_slice_in_dim(far_v, src, page, 0)
+        nk_new = jax.lax.dynamic_update_slice_in_dim(nk, page_k, dst, 0)
+        nv_new = jax.lax.dynamic_update_slice_in_dim(nv, page_v, dst, 0)
+        keep = valid[i]
+        nk = jnp.where(keep, nk_new, nk)
+        nv = jnp.where(keep, nv_new, nv)
+        return nk, nv
+
+    return jax.lax.fori_loop(0, rows.shape[0], copy_page, (near_k, near_v))
+
+
 def plan_and_migrate(cache: dict, q: jax.Array, pos: jax.Array,
-                     cfg: TieredKVConfig) -> dict:
-    """One BBC interval: score -> plan -> migrate (vectorized over batch).
+                     cfg: TieredKVConfig, idle=True) -> dict:
+    """One planning interval: score -> plan -> migrate (vectorized over
+    batch) under ``cfg.policy``.
 
     Only pages that are completely written (page_end <= pos) are candidates.
-    Migration is a pure on-device copy — the IST analogue.
+    Migration is a pure on-device copy — the IST analogue.  ``idle`` is the
+    WMC gate: pass False (or a traced bool) when the serving step has no
+    spare migration budget; SC/BBC ignore it, STATIC never migrates.
     """
+    if cfg.policy.upper() == "STATIC":
+        return cache   # OS-exposed mechanism: no runtime migration, and no
+                       # point paying the scoring pass for dead state
     cache = dict(cache)
     masses = page_masses(q, cache, pos, cfg)
     n_pages = masses.shape[1]
@@ -171,37 +205,65 @@ def plan_and_migrate(cache: dict, q: jax.Array, pos: jax.Array,
     masses = jnp.where(complete[None, :], masses, 0.0)
     # EMA in "activations per interval" units: scale mass to a count-like
     # magnitude so TierCosts thresholds behave like the DRAM policy's.
-    cache["scores"] = ema_update(cache["scores"], masses * cfg.interval,
-                                 cfg.costs)
+    acts = masses * cfg.interval
+    cache["scores"] = ema_update(cache["scores"], acts, cfg.costs)
+    cache["last_use"] = jnp.where(acts > 0, cache["step"].astype(jnp.float32),
+                                  cache["last_use"])
+    cache["step"] = cache["step"] + 1
 
-    def per_seq(scores, slot_of_page, page_of_slot, near_k, near_v, far_k,
-                far_v):
+    # SC/WMC cache what received attention mass *this interval*; BBC keeps
+    # its sustained-reuse eligibility over the full EMA score population.
+    sc_like = cfg.policy.upper() in ("SC", "WMC")
+
+    def per_seq(acts_row, scores, last_use, slot_of_page, page_of_slot,
+                near_k, near_v, far_k, far_v):
         rows, slots, valid = plan_promotions(
             scores, slot_of_page, page_of_slot, cfg.costs,
-            cfg.max_promotions)
+            cfg.max_promotions, policy=cfg.policy, last_use=last_use,
+            accessed=(acts_row > 0) if sc_like else None, idle=idle)
         slot_of_page, page_of_slot = apply_promotions(
             slot_of_page, page_of_slot, rows, slots, valid)
-
-        def copy_page(i, bufs):
-            nk, nv = bufs
-            src = jnp.where(valid[i], rows[i], 0) * cfg.page
-            dst = jnp.where(valid[i], slots[i], 0) * cfg.page
-            page_k = jax.lax.dynamic_slice_in_dim(far_k, src, cfg.page, 0)
-            page_v = jax.lax.dynamic_slice_in_dim(far_v, src, cfg.page, 0)
-            nk_new = jax.lax.dynamic_update_slice_in_dim(nk, page_k, dst, 0)
-            nv_new = jax.lax.dynamic_update_slice_in_dim(nv, page_v, dst, 0)
-            keep = valid[i]
-            nk = jnp.where(keep, nk_new, nk)
-            nv = jnp.where(keep, nv_new, nv)
-            return nk, nv
-
-        near_k, near_v = jax.lax.fori_loop(0, cfg.max_promotions, copy_page,
-                                           (near_k, near_v))
+        near_k, near_v = _copy_pages(near_k, near_v, far_k, far_v, rows,
+                                     slots, valid, cfg.page)
         return slot_of_page, page_of_slot, near_k, near_v, valid.sum()
 
     (cache["slot_of_page"], cache["page_of_slot"], cache["near_k"],
      cache["near_v"], n_migr) = jax.vmap(per_seq)(
-        cache["scores"], cache["slot_of_page"], cache["page_of_slot"],
-        cache["near_k"], cache["near_v"], cache["far_k"], cache["far_v"])
+        acts, cache["scores"], cache["last_use"], cache["slot_of_page"],
+        cache["page_of_slot"], cache["near_k"], cache["near_v"],
+        cache["far_k"], cache["far_v"])
     cache["migrations"] = cache["migrations"] + n_migr.sum().astype(jnp.int32)
+    return cache
+
+
+def preload_static_kv(cache: dict, profile_masses: jax.Array,
+                      pos: jax.Array, cfg: TieredKVConfig) -> dict:
+    """OS-exposed static placement: fill the near tier with the profile's
+    hottest pages per sequence (the paper's t=0 profiling step), copying the
+    pages in — then serve with ``policy="STATIC"`` (no runtime migration).
+
+    profile_masses: (B, n_pages) profiled per-page attention mass.
+    pos: current decode position — only completely-written pages
+    (page_end <= pos) may be pinned, else the near copy would contain
+    unwritten positions that ``tiered_attention`` masks out of the far pass
+    (the same guard ``plan_and_migrate`` applies)."""
+    cache = dict(cache)
+    C = cache["page_of_slot"].shape[1]
+    n_pages = profile_masses.shape[1]
+    complete = (jnp.arange(n_pages) + 1) * cfg.page <= pos
+    profile_masses = jnp.where(complete[None, :], profile_masses, 0.0)
+
+    def per_seq(masses, near_k, near_v, far_k, far_v):
+        slot_of_page, page_of_slot = preload_static(masses, C)
+        slots = jnp.arange(C, dtype=jnp.int32)
+        valid = page_of_slot >= 0
+        rows = jnp.maximum(page_of_slot, 0)
+        near_k, near_v = _copy_pages(near_k, near_v, far_k, far_v, rows,
+                                     slots, valid, cfg.page)
+        return slot_of_page, page_of_slot, near_k, near_v
+
+    (cache["slot_of_page"], cache["page_of_slot"], cache["near_k"],
+     cache["near_v"]) = jax.vmap(per_seq)(
+        profile_masses, cache["near_k"], cache["near_v"], cache["far_k"],
+        cache["far_v"])
     return cache

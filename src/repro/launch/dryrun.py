@@ -7,7 +7,7 @@ The two lines above MUST run before any other import (jax locks the device
 count at first init).  This module is the proof that the distribution config
 is coherent: for the 16x16 single-pod mesh and the 2x16x16 multi-pod mesh,
 ``jax.jit(step).lower(...).compile()`` must succeed for every cell, and the
-compiled artifact's memory/cost analysis feeds EXPERIMENTS.md §Dry-run and
+compiled artifact's memory/cost analysis feeds docs/experiments.md §Dry-run and
 §Roofline.
 
 Usage:
@@ -54,7 +54,7 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
                params_dtype: str = "f32"):
     """Lower + compile one cell; returns the artifact dict.
 
-    Perf-iteration knobs (EXPERIMENTS.md §Perf):
+    Perf-iteration knobs (docs/experiments.md §Perf):
       pad_heads: pad Q heads to N so they divide the model axis (TP for
         awkward head counts; dummy heads are function-preserving).
       grad_dtype: 'bf16' reduces gradients in bf16 (half the DP wire bytes).
@@ -159,6 +159,8 @@ def lower_cell(arch_name: str, shape_name: str, multi_pod: bool,
     compile_s = time.time() - t0
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # jax 0.4.x returns [dict]; >=0.5 a dict
+        cost = cost[0] if cost else {}
     hlo = hlo_analysis.analyze_module(compiled.as_text())
 
     art = {

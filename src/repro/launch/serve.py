@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, InputShape
+from repro.core.tiered_kv import TieredKVConfig
 from repro.models import transformer
 
 
@@ -27,25 +28,32 @@ def make_decode_step(arch: ArchConfig):
 
 
 def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,
-                                   page: int = 128, window: int = 1024):
+                                   page: int = 128, window: int = 1024,
+                                   tier_cfg: TieredKVConfig | None = None):
     """TL-DRAM sparse serving mode: each step attends the near tier — a
-    *materialized* contiguous buffer of BBC-selected hot pages — plus the
+    *materialized* contiguous buffer of policy-selected hot pages — plus the
     recent window (a contiguous slice of the far cache), instead of the full
     far cache.  HBM reads drop from O(T) to O(near + window) per layer.
 
-    The near buffer is maintained by the runtime BBC between steps via pure
-    on-device page copies (``core.tiered_kv.plan_and_migrate`` — the IST
-    analogue); the decode step only *reads* it.  An earlier iteration
-    gathered pages on the fly inside the step: with the time axis
-    model-sharded, GSPMD turned the dynamic page gather into per-layer
-    all-gathers of the whole cache (bytes 5.3x WORSE than baseline,
-    EXPERIMENTS.md §Perf cell C iter 1) — materializing the near tier is
-    what makes the paper's design work on TPU too.
+    The near buffer is maintained by the unified tier engine between steps
+    via pure on-device page copies (``core.tiered_kv.plan_and_migrate`` with
+    any ``repro.tier`` policy — SC/WMC/BBC/STATIC, the IST analogue); the
+    decode step only *reads* it.  Pass ``tier_cfg`` to source the near-tier
+    geometry and policy from one ``TieredKVConfig`` (the single config knob
+    for policy sweeps); the explicit ``near_pages``/``page`` arguments remain
+    for callers without a runtime config.  An earlier iteration gathered
+    pages on the fly inside the step: with the time axis model-sharded,
+    GSPMD turned the dynamic page gather into per-layer all-gathers of the
+    whole cache (bytes 5.3x WORSE than baseline, docs/experiments.md §Perf
+    cell C iter 1) — materializing the near tier is what makes the paper's
+    design work on TPU too.
 
     Exactness holds for all attention mass inside (near U window); the
     benchmark measures the residual mass (bench_tiered_kv: coverage >0.95
     under Zipfian attention).  Valid for steady-state decode (pos >= window).
     """
+    if tier_cfg is not None:
+        near_pages, page = tier_cfg.near_pages, tier_cfg.page
     from repro.models.layers import apply_rope, decode_attention, rms_norm
     from repro.models.layers import gelu_mlp, swiglu
     from repro.models import moe as moe_lib
@@ -83,7 +91,7 @@ def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,
             # recent window: an incrementally-written ring buffer.  (A
             # dynamic_slice of the big time-sharded cache would make GSPMD
             # all-gather the whole cache per layer — measured 26x worse,
-            # §Perf cell C iter 2.)
+            # docs/experiments.md §Perf cell C iter 2.)
             slot = pos % window
             k_win = jax.lax.dynamic_update_slice_in_dim(
                 cl["win_k"], k, slot, 1)
@@ -91,8 +99,9 @@ def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,
                 cl["win_v"], v, slot, 1)
             # Two partial attentions + exact LSE merge: concatenating the
             # two differently-sharded buffers made GSPMD replicate the
-            # result per layer (+47 ms collective, §Perf cell C iter 3);
-            # separate passes keep each buffer's time sharding local.
+            # result per layer (+47 ms collective, docs/experiments.md
+            # §Perf cell C iter 3); separate passes keep each buffer's
+            # time sharding local.
             from repro.core.tiered_kv import _far_stats
             from repro.kernels import ref as kref
             B_ = q.shape[0]
@@ -127,9 +136,14 @@ def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,
 
 
 def sparse_cache_extras(arch: ArchConfig, batch: int, seq_len: int,
-                        near_pages: int, page: int, dtype=jnp.bfloat16):
+                        near_pages: int = 8, page: int = 128,
+                        dtype=jnp.bfloat16,
+                        tier_cfg: TieredKVConfig | None = None):
     """Extra cache leaves for the sparse tiered decode step: the
-    materialized near-tier buffers (BBC-maintained between steps)."""
+    materialized near-tier buffers (maintained between steps by the
+    ``repro.tier`` policy configured in ``tier_cfg``)."""
+    if tier_cfg is not None:
+        near_pages, page = tier_cfg.near_pages, tier_cfg.page
     L = arch.n_layers
     hd = arch.resolved_head_dim
     tn = near_pages * page

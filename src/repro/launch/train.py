@@ -39,7 +39,7 @@ def make_train_step(arch: ArchConfig, cfg: TrainConfig):
             # inserts inside the layer loop — are bf16 end to end (half the
             # wire bytes).  A post-hoc cast cannot do this: the reduction
             # has already happened in f32 inside the loop (refuted in
-            # EXPERIMENTS.md §Perf kimi iter 1).
+            # docs/experiments.md §Perf kimi iter 1).
             params_c = jax.tree.map(
                 lambda a: a.astype(jnp.bfloat16)
                 if a.dtype == jnp.float32 and a.ndim > 1 else a, params)

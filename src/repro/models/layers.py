@@ -37,7 +37,7 @@ def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     Adjacent-pair (interleaved / NeoX) rotation: pair (2i, 2i+1) rotates by
     angle pos * theta^(-2i/hd).  Chosen over the half-split convention because
     rotation pairs stay contiguous — a head_dim-sharded tensor rotates fully
-    locally under GSPMD (DESIGN.md Sec. 5).
+    locally under GSPMD (docs/design.md Sec. 5).
     """
     hd = x.shape[-1]
     freqs = jnp.asarray(rope_frequencies(hd, theta), dtype=jnp.float32)

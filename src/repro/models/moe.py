@@ -52,7 +52,7 @@ def init_moe_params(key: jax.Array, d_model: int, cfg: MoEConfig,
 
 
 # Process-wide defaults; launchers flip these as perf knobs
-# (EXPERIMENTS.md §Perf, kimi-k2 iterations).  Dispatch-tensor traffic is
+# (docs/experiments.md §Perf, kimi-k2 iterations).  Dispatch-tensor traffic is
 # T * group_size * top_k * cf — linear in the group size.
 DEFAULT_IMPL = "einsum"
 DEFAULT_GROUP_SIZE = 1024

@@ -8,7 +8,7 @@ the 500k-token shapes tractable.
 
 Decode is the O(1) recurrent form: one state update per token, no KV cache —
 the reason the TL-DRAM KV-tier mechanism is inapplicable to this family
-(DESIGN.md §Arch-applicability).
+(docs/design.md §Arch-applicability).
 
 Layout: x (B,S,H,P) heads; B/C projections shared across heads (one group);
 state (B,H,P,N).  All recurrence math in float32.

@@ -3,7 +3,7 @@
 The 8-bit mode stores both moments as int8 with per-block f32 absmax scales
 (block = 256 elements, following the 8-bit-optimizers recipe) — a 3.5x
 reduction of optimizer-state HBM, which is what lets the trillion-parameter
-config fit a 512-chip fleet (EXPERIMENTS.md §Dry-run).
+config fit a 512-chip fleet (docs/experiments.md §Dry-run).
 """
 
 from __future__ import annotations

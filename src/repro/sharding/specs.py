@@ -1,6 +1,6 @@
 """Auto-divisible sharding rules: param/input/cache PartitionSpecs per arch.
 
-Policy (DESIGN.md Sec. 5):
+Policy (docs/design.md Sec. 5):
   * TP ('model' axis): attention heads, FFN hidden, expert dim (EP), vocab.
   * DP/FSDP ('pod','data' axes): batch; optionally every parameter's d_model
     dim + optimizer moments (ZeRO-3-style, XLA inserts the per-layer

@@ -1,0 +1,26 @@
+"""Unified near/far tier subsystem (paper Sec. 4-5; docs/tier.md).
+
+One policy engine for every substrate that has a small fast "near" segment
+caching a large slow "far" segment:
+
+  * `repro.tier.costs`      — `TierCosts`, the cost landscape (units are the
+    substrate's: nanoseconds for DRAM, modeled byte-costs for TPU tiers).
+  * `repro.tier.rules`      — the decision-rule core: eligibility, victim
+    ordering and acceptance for all four paper policies (SC / WMC / BBC /
+    STATIC), written against an array namespace so NumPy and JAX execute the
+    same arithmetic.
+  * `repro.tier.engine`     — per-access NumPy engine, batched over G
+    independent tier groups (the DRAM simulator's bank x subarray grid).
+  * `repro.tier.jax_engine` — jittable interval-mode engine for the TPU
+    runtime (tiered KV cache, tiered embedding table).
+  * `repro.tier.reference`  — the original object/dict policies, kept as the
+    oracle for stream-replay parity tests.
+"""
+
+from repro.tier.costs import TierCosts
+from repro.tier.engine import Decision, TierEngine
+from repro.tier.rules import POLICY_NAMES, ema_update
+
+__all__ = [
+    "TierCosts", "TierEngine", "Decision", "POLICY_NAMES", "ema_update",
+]

@@ -1,0 +1,41 @@
+"""Unified cost model for the tier engines (docs/tier.md §Costs).
+
+Replaces the old twin dataclasses ``repro.core.policies.PolicyCosts`` and
+``repro.core.tier_policy.TierCosts`` with a single definition shared by the
+DRAM simulator (nanoseconds) and the TPU runtime (modeled relative byte
+costs) — only the ratios matter to the policies.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TierCosts:
+    """Latency landscape a tier policy optimizes over.
+
+    near_cost / far_cost : cost of one near- / far-segment access.
+    migrate_cost         : cost of one inter-segment transfer (IST).
+    hysteresis           : BBC margin multiplier on the migration cost.
+    min_score            : BBC minimum decayed activation count — a row must
+                           show *sustained* reuse before a migration pays.
+    decay                : per-interval EMA decay of activation scores.
+    """
+
+    near_cost: float
+    far_cost: float
+    migrate_cost: float
+    hysteresis: float = 2.0
+    min_score: float = 2.0
+    decay: float = 0.95
+
+    @property
+    def saving(self) -> float:
+        """Cost saved per near-segment access (the per-activation benefit)."""
+        return self.far_cost - self.near_cost
+
+    # Legacy alias used by the object reference policies.
+    @property
+    def saving_per_access(self) -> float:
+        return self.saving

@@ -1,0 +1,170 @@
+"""Per-access NumPy tier engine, batched across tier groups (docs/tier.md).
+
+One `TierEngine` instance holds the near-segment state for *every* group of a
+device — the DRAM simulator's full bank x subarray grid — as a struct of
+dense arrays instead of per-subarray dict objects:
+
+    slot_of_row : (G, N) int32   near slot per far row, -1 if far-resident
+    row_of_slot : (G, C) int32   far row per near slot, -1 if empty
+    score       : (G, N) f64     decayed activation counts (BBC benefit)
+    last_use    : (G, N) f64     last access time (SC/WMC LRU)
+    dirty       : (G, N) bool    near rows needing a write-back IST on evict
+    slot_seq    : (G, C) i64     promotion order (eviction tie-break)
+
+Per-access operations are O(1) array writes plus an O(C) victim scan; score
+decay is a single vector multiply per group every ``decay_period`` accesses.
+This replaces the per-request Python dict layer (`CacheState` + per-key
+loops) that was the simulator's policy-side bottleneck, and makes the state
+layout identical to the jittable interval engine (`repro.tier.jax_engine`).
+
+The decision arithmetic itself lives in `repro.tier.rules` and is shared with
+the JAX engine; `tests/test_tier_parity.py` replays identical access streams
+through this engine and the object oracle (`repro.tier.reference`) for all
+four policies and asserts decision-for-decision parity.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.tier import rules
+from repro.tier.costs import TierCosts
+
+
+@dataclass
+class Decision:
+    """Outcome of one per-access policy decision."""
+
+    promote: bool = False
+    victim_row: int = -1        # far row to evict; -1 => an empty slot is used
+    victim_dirty: bool = False  # eviction needs a write-back IST
+    slot: int = -1              # near slot the candidate lands in
+
+
+class TierEngine:
+    """All four paper policies over array state, G independent groups."""
+
+    def __init__(self, policy: str, costs: TierCosts, groups: int, rows: int,
+                 capacity: int, decay_period: int = 16):
+        policy = policy.upper()
+        if policy not in rules.POLICY_NAMES:
+            raise ValueError(f"unknown policy {policy!r}")
+        if capacity < 1:
+            raise ValueError("near-segment capacity must be >= 1 "
+                             "(use an untiered device for capacity 0)")
+        self.policy = policy
+        self.costs = costs
+        self.G, self.N, self.C = groups, rows, capacity
+        self.decay_period = decay_period
+        self.slot_of_row = np.full((groups, rows), -1, np.int32)
+        self.row_of_slot = np.full((groups, capacity), -1, np.int32)
+        self.score = np.zeros((groups, rows))
+        self.last_use = np.zeros((groups, rows))
+        self.dirty = np.zeros((groups, rows), bool)
+        self.slot_seq = np.zeros((groups, capacity), np.int64)
+        # Scalar per-group counters stay Python ints: they are touched on
+        # every access and list indexing beats NumPy scalar round-trips.
+        self.occupancy = [0] * groups
+        self._since_decay = [0] * groups
+        self._seq = 0
+
+    # -- queries -------------------------------------------------------------
+
+    def hit(self, g: int, row: int) -> bool:
+        return self.slot_of_row[g, row] >= 0
+
+    def slot(self, g: int, row: int) -> int:
+        return self.slot_of_row[g, row].item()
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def on_access(self, g: int, row: int, now: float, is_write: bool,
+                  in_near: bool, activated: bool = True) -> None:
+        """Record one access; decays the group's scores every
+        ``decay_period`` accesses (hits and misses both count)."""
+        self.last_use[g, row] = now
+        # The near segment saves latency/energy per ACTIVATION, not per
+        # column access: row-buffer hits are free either way.
+        if activated:
+            self.score[g, row] += 1.0
+        if in_near and is_write:
+            self.dirty[g, row] = True
+        n = self._since_decay[g] + 1
+        self._since_decay[g] = n
+        if n >= self.decay_period:
+            self._since_decay[g] = 0
+            s = self.score[g]
+            np.multiply(s, self.costs.decay, out=s)
+            s[s < rules.SCORE_FLOOR] = 0.0
+
+    # -- decision ------------------------------------------------------------
+
+    def decide(self, g: int, row: int, now: float,
+               bank_idle: bool) -> Decision:
+        """Should the far row just accessed be promoted, and at whose cost?"""
+        policy = self.policy
+        if policy == "STATIC":
+            return Decision()
+        score = self.score[g, row]
+        if not bool(rules.eligible(policy, score, True, self.costs, np)):
+            return Decision()
+        victim_row, victim_slot, victim_empty = self._select_victim(g)
+        victim_score = 0.0 if victim_empty else self.score[g, victim_row]
+        victim_dirty = (not victim_empty) and bool(self.dirty[g, victim_row])
+        ok = rules.accept(policy, score, victim_score, victim_dirty,
+                          victim_empty, bank_idle, self.costs, np)
+        if not bool(ok):
+            return Decision()
+        return Decision(promote=True,
+                        victim_row=-1 if victim_empty else victim_row,
+                        victim_dirty=victim_dirty, slot=victim_slot)
+
+    def _select_victim(self, g: int) -> tuple[int, int, bool]:
+        """(victim_row, slot, empty): first empty slot if any, else the
+        minimum of the policy's eviction key, ties to the oldest promotion
+        (matching the reference oracle's dict-insertion order)."""
+        if self.occupancy[g] < self.C:
+            return -1, int(np.argmax(self.row_of_slot[g] < 0)), True
+        resident = self.row_of_slot[g]
+        key = rules.victim_order_key(self.policy, self.score[g],
+                                     self.last_use[g])[resident]
+        tied = np.nonzero(key == key.min())[0]
+        slot = int(tied[np.argmin(self.slot_seq[g, tied])])
+        return int(resident[slot]), slot, False
+
+    # -- state updates -------------------------------------------------------
+
+    def apply(self, g: int, row: int, d: Decision) -> None:
+        """Commit a promotion decision (the IST itself is the caller's)."""
+        if d.victim_row >= 0:
+            self.slot_of_row[g, d.victim_row] = -1
+            self.dirty[g, d.victim_row] = False
+        else:
+            self.occupancy[g] += 1
+        self.row_of_slot[g, d.slot] = row
+        self.slot_of_row[g, row] = d.slot
+        self._seq += 1
+        self.slot_seq[g, d.slot] = self._seq
+
+    def preload(self, counts: np.ndarray,
+                first_seen: np.ndarray | None = None) -> None:
+        """STATIC profile placement: per group, fill slots with the hottest
+        rows (count ties broken by first occurrence — the profiling pass's
+        observation order, like the reference oracle's dict ordering).
+
+        counts     : (G, N) profiled access counts.
+        first_seen : (G, N) index of each row's first access (optional).
+        """
+        for g in range(self.G):
+            c = counts[g]
+            idx = np.nonzero(c > 0)[0]
+            tie = first_seen[g, idx] if first_seen is not None else idx
+            order = idx[np.lexsort((tie, -c[idx]))]
+            take = order[: self.C]
+            for slot, row in enumerate(take):
+                self.row_of_slot[g, slot] = row
+                self.slot_of_row[g, row] = slot
+                self.slot_seq[g, slot] = slot
+            self.occupancy[g] = len(take)

@@ -1,0 +1,82 @@
+"""Jittable interval-mode tier engine for the TPU substrate (docs/tier.md).
+
+The TPU runtime (tiered KV cache, tiered embedding table) cannot afford a
+policy decision per access; instead a planning pass runs every N decode steps
+(the paper's BBC samples activation counts per interval in hardware — here
+the "interval" is N steps).  All four policies run through the shared
+decision core in `repro.tier.rules` over fixed-shape arrays, so the whole
+pass jits and vmaps:
+
+    ema_update       : decayed activation scores.
+    plan_promotions  : (rows, slots, valid) for up to K migrations.
+    apply_promotions : commit the mapping updates (drop-sentinel scatters).
+    preload_static   : the OS-exposed mechanism's t=0 profile placement.
+
+``policy`` is a static Python string (chooses the compiled program); WMC's
+``idle`` gate may be a traced boolean.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.tier import rules
+from repro.tier.costs import TierCosts
+
+ema_update = rules.ema_update
+
+
+def plan_promotions(scores: jax.Array, slot_of_row: jax.Array,
+                    row_of_slot: jax.Array, costs: TierCosts,
+                    max_promotions: int, *, policy: str = "BBC",
+                    last_use: jax.Array | None = None,
+                    accessed: jax.Array | None = None,
+                    idle=True, dirty: jax.Array | None = None):
+    """One planning step; see ``rules.plan_promotions_xp`` for semantics.
+
+    scores:      (N,) f32 — EMA activation counts per row.
+    slot_of_row: (N,) int32 — near slot per row, -1 if far.
+    row_of_slot: (C,) int32 — far row per near slot, -1 if empty.
+    """
+    return rules.plan_promotions_xp(
+        jnp, policy, scores, slot_of_row, row_of_slot, costs,
+        max_promotions, last_use=last_use, accessed=accessed, idle=idle,
+        dirty=dirty)
+
+
+def apply_promotions(slot_of_row: jax.Array, row_of_slot: jax.Array,
+                     promote_rows: jax.Array, victim_slots: jax.Array,
+                     valid: jax.Array):
+    """Update the two mapping arrays after a planning step.
+
+    Invalid/sentinel writes are routed to an out-of-bounds index and dropped
+    (note: -1 would *wrap* in JAX indexing, so N/C sentinels are used).
+    """
+    N = slot_of_row.shape[0]
+    C = row_of_slot.shape[0]
+    old_rows = row_of_slot[victim_slots]
+    # evict: clear slot pointers of displaced rows (skip empty slots)
+    evict_idx = jnp.where(valid & (old_rows >= 0), old_rows, N)
+    slot_of_row = slot_of_row.at[evict_idx].set(-1, mode="drop")
+    # place: write new mappings
+    place_rows = jnp.where(valid, promote_rows, N)
+    slot_of_row = slot_of_row.at[place_rows].set(victim_slots, mode="drop")
+    slot_idx = jnp.where(valid, victim_slots, C)
+    row_of_slot = row_of_slot.at[slot_idx].set(
+        jnp.where(valid, promote_rows, -1), mode="drop")
+    return slot_of_row, row_of_slot
+
+
+def preload_static(counts: jax.Array, capacity: int):
+    """OS-exposed static placement: map the ``capacity`` hottest rows (by
+    profiled count) to near slots 0..C-1.  counts: (N,) — returns
+    (slot_of_row (N,), row_of_slot (C,))."""
+    N = counts.shape[0]
+    top_counts, rows = jax.lax.top_k(counts, capacity)
+    valid = top_counts > 0
+    row_of_slot = jnp.where(valid, rows, -1).astype(jnp.int32)
+    place = jnp.where(valid, rows, N)
+    slot_of_row = (-jnp.ones((N,), jnp.int32)).at[place].set(
+        jnp.arange(capacity, dtype=jnp.int32), mode="drop")
+    return slot_of_row, row_of_slot

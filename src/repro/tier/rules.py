@@ -1,0 +1,152 @@
+"""Decision-rule core shared by every tier engine (docs/tier.md §Rules).
+
+The four paper policies, reduced to three orthogonal questions answered once
+here and executed by both engines:
+
+  eligible()         which rows may be promoted at all
+  victim_order_key() which resident row is displaced first
+  accept()           whether a planned (candidate, victim) migration pays
+
+  SC  (Simple Caching)        : every accessed far row; LRU victim; always.
+  WMC (Wait-Minimized Caching): like SC, but only while the bank is idle so
+        the inter-segment transfer never delays a pending request.
+  BBC (Benefit-Based Caching) : rows with sustained reuse; minimum-retained-
+        benefit victim; only when the candidate's expected benefit (decayed
+        activation count x saving per access) clears the victim's benefit
+        plus the hysteresis-scaled migration cost.  The paper's best policy.
+  STATIC (OS-exposed)         : profile-driven placement at t=0, no runtime
+        migration (the paper's second approach).
+
+Every function takes the array namespace ``xp`` (``numpy`` or ``jax.numpy``)
+so the nanosecond-substrate engine (`repro.tier.engine`) and the jittable TPU
+engine (`repro.tier.jax_engine`) run the *same* policy arithmetic — asserted
+by the stream-replay parity tests in ``tests/test_tier_parity.py``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.tier.costs import TierCosts
+
+POLICY_NAMES = ("SC", "WMC", "BBC", "STATIC")
+
+_NEG_INF = float("-inf")
+
+# Scores below this after decay are treated as zero (dead entries).
+SCORE_FLOOR = 1e-3
+
+
+def ema_update(scores, activations, costs: TierCosts):
+    """Decayed activation counts: scores, activations are (..., N) arrays."""
+    return scores * costs.decay + activations
+
+
+def benefit(scores, costs: TierCosts):
+    """Expected benefit of near residency: activations x saving per access."""
+    return scores * costs.saving
+
+
+def eligible(policy: str, scores, accessed, costs: TierCosts, xp):
+    """Which rows may be promoted.  ``accessed`` marks rows activated in the
+    current access (per-access mode) or interval (interval mode)."""
+    if policy in ("SC", "WMC"):
+        return accessed
+    if policy == "BBC":
+        return accessed & (scores >= costs.min_score)
+    if policy == "STATIC":
+        return xp.zeros_like(accessed)
+    raise ValueError(f"unknown policy {policy!r}")
+
+
+def victim_order_key(policy: str, scores, last_use):
+    """Per-row key the victim search minimizes: LRU time for SC/WMC,
+    retained benefit (== score, up to the constant saving factor) for BBC."""
+    if policy in ("SC", "WMC"):
+        return last_use
+    return scores
+
+
+def accept(policy: str, cand_score, victim_score, victim_dirty, victim_empty,
+           idle, costs: TierCosts, xp):
+    """Whether a planned (candidate, victim) migration goes ahead.
+
+    All score/flag arguments broadcast; the result broadcasts against them
+    (SC/WMC/STATIC return scalars).  ``idle`` may be a traced scalar (WMC's
+    bank-idle gate).
+    """
+    if policy == "SC":
+        return True
+    if policy == "WMC":
+        return idle
+    if policy == "STATIC":
+        return False
+    # BBC.  A dirty victim needs a write-back IST on top of the fill IST; an
+    # empty slot only needs the candidate to pay for its own migration.
+    cand_b = benefit(cand_score, costs)
+    victim_b = benefit(victim_score, costs)
+    ist = costs.migrate_cost * xp.where(victim_dirty, 2.0, 1.0)
+    margin = xp.where(victim_empty, costs.migrate_cost,
+                      victim_b + ist * costs.hysteresis)
+    return cand_b > margin
+
+
+def top_k(xp, x, k: int):
+    """Descending top-k with index-ascending tie-break on both backends."""
+    if xp is np:
+        idx = np.argsort(-x, kind="stable")[:k].astype(np.int32)
+        return x[idx], idx
+    import jax
+    return jax.lax.top_k(x, k)
+
+
+def plan_promotions_xp(xp, policy: str, scores, slot_of_row, row_of_slot,
+                       costs: TierCosts, max_promotions: int, *,
+                       last_use=None, accessed=None, idle=True, dirty=None):
+    """One interval-mode planning step over a row population.
+
+    scores      : (N,) decayed activation counts per row.
+    slot_of_row : (N,) int32 — near slot per row, -1 if far-resident.
+    row_of_slot : (C,) int32 — far row per near slot, -1 if empty.
+    last_use    : (N,) optional recency stamps (required for exact SC/WMC
+                  LRU victims; scores are used as a decayed-recency proxy
+                  when absent).
+    accessed    : (N,) optional bool mask of rows activated this interval
+                  (defaults to ``scores > 0``).
+    dirty       : (N,) optional bool mask of dirty near rows (write-back
+                  IST accounting for BBC; substrates with immutable rows,
+                  like KV pages, leave it None).
+
+    Returns ``(promote_rows (K,), victim_slots (K,), valid (K,))``: rows to
+    migrate and the slots to place them in.  Promotions fill empty slots
+    first, then displace victims in the policy's eviction order.
+    """
+    policy = policy.upper()
+    if policy not in POLICY_NAMES:
+        raise ValueError(f"unknown policy {policy!r}")
+    in_near = slot_of_row >= 0
+    if accessed is None:
+        accessed = scores > 0.0
+    elig = eligible(policy, scores, accessed, costs, xp) & ~in_near
+    cand_rank = xp.where(elig, scores, _NEG_INF)
+    top_scores, top_rows = top_k(xp, cand_rank, max_promotions)
+
+    slot_empty = row_of_slot < 0
+    safe_rows = xp.maximum(row_of_slot, 0)
+    vkey_rows = victim_order_key(
+        policy, scores, last_use if last_use is not None else scores)
+    vkey = xp.where(slot_empty, _NEG_INF, vkey_rows[safe_rows])
+    # Victims: empty slots first (-inf key sorts first under -vkey), then the
+    # policy's eviction order, ties broken towards lower slot index.
+    _, victim_slots = top_k(xp, -vkey, max_promotions)
+    victim_is_empty = slot_empty[victim_slots]
+    victim_scores = xp.where(victim_is_empty, 0.0,
+                             scores[safe_rows][victim_slots])
+    if dirty is None:
+        victim_dirty = xp.zeros_like(victim_is_empty)
+    else:
+        victim_dirty = dirty[safe_rows][victim_slots] & ~victim_is_empty
+    ok = accept(policy, xp.where(xp.isfinite(top_scores), top_scores, 0.0),
+                victim_scores, victim_dirty, victim_is_empty, idle, costs, xp)
+    valid = ok & xp.isfinite(top_scores)
+    return top_rows, victim_slots, valid

@@ -4,8 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based kernel tests need hypothesis")
+from hypothesis import given, settings  # noqa: E402
+import hypothesis.strategies as st  # noqa: E402
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_fwd

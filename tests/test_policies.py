@@ -1,9 +1,18 @@
-"""Property-based tests of the near-segment caching policies (hypothesis)."""
+"""Property-based tests of the reference near-segment policies (hypothesis).
 
-import hypothesis.strategies as st
-from hypothesis import given, settings
+These exercise the object oracle (`repro.tier.reference`) through the
+`repro.core.policies` compatibility shim; decision-for-decision parity of
+the vectorized engines is covered by ``tests/test_tier_parity.py``.
+"""
 
-from repro.core.policies import (
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property-based policy tests need hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core.policies import (  # noqa: E402
     CacheState, PolicyCosts, make_policy,
 )
 
