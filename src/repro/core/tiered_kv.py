@@ -78,20 +78,65 @@ def init_tiered_cache(k_cache: jax.Array, v_cache: jax.Array,
     }
 
 
+def _pos_vec(pos, B: int) -> jax.Array:
+    """Normalize a decode position to a per-sequence (B,) vector.
+
+    Every read-path entry point accepts either the legacy scalar (one
+    position shared by the whole batch) or a ragged per-slot vector (the
+    continuous-batching serving engine's slot pool)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (B,))
+    return pos
+
+
+def near_token_count(cache: dict, cfg: TieredKVConfig) -> jax.Array:
+    """(B,) live near-tier token count.  Occupied slots always form a
+    prefix (pinned by tests/test_read_path.py), so count * page is the
+    exact live region the kernel streams."""
+    occupied = (cache["page_of_slot"] >= 0)
+    return occupied.sum(axis=1).astype(jnp.int32) * cfg.page
+
+
+def reset_sequences(cache: dict, rows: jax.Array) -> dict:
+    """Clear tier state for retired slots (rows: (B,) bool mask).
+
+    The far/near K,V buffers are left untouched — a cleared mapping makes
+    the near copies unreachable (near_len excludes them) and the next
+    prefill overwrites the far rows; only the policy state must not leak
+    into the slot's next tenant."""
+    cache = dict(cache)
+    r = rows[:, None]
+    cache["slot_of_page"] = jnp.where(r, -1, cache["slot_of_page"])
+    cache["page_of_slot"] = jnp.where(r, -1, cache["page_of_slot"])
+    cache["scores"] = jnp.where(r, 0.0, cache["scores"])
+    cache["last_use"] = jnp.where(r, 0.0, cache["last_use"])
+    return cache
+
+
 def append_token(cache: dict, k_new: jax.Array, v_new: jax.Array,
                  pos: jax.Array) -> dict:
-    """Append one token's K/V to the far tier (master copy)."""
+    """Append one token's K/V to the far tier (master copy).
+
+    pos: scalar position, or a (B,) vector for ragged per-slot appends."""
     cache = dict(cache)
-    cache["far_k"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["far_k"], k_new, pos, 1)
-    cache["far_v"] = jax.lax.dynamic_update_slice_in_dim(
-        cache["far_v"], v_new, pos, 1)
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 1:
+        b_idx = jnp.arange(k_new.shape[0])
+        cache["far_k"] = cache["far_k"].at[b_idx, pos].set(k_new[:, 0])
+        cache["far_v"] = cache["far_v"].at[b_idx, pos].set(v_new[:, 0])
+    else:
+        cache["far_k"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["far_k"], k_new, pos, 1)
+        cache["far_v"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["far_v"], v_new, pos, 1)
     return cache
 
 
 def tiered_attention(cache: dict, q: jax.Array, pos: jax.Array,
                      cfg: TieredKVConfig) -> jax.Array:
-    """Two-tier decode attention.  q: (B,H,hd); pos: scalar current position.
+    """Two-tier decode attention.  q: (B,H,hd); pos: scalar current
+    position, or a (B,) vector of ragged per-slot positions.
 
     Near path: Pallas kernel over the contiguous near buffer.
     Far path: XLA attention over the far cache, with promoted pages masked
@@ -100,12 +145,12 @@ def tiered_attention(cache: dict, q: jax.Array, pos: jax.Array,
     B, H, hd = q.shape
     T = cache["far_k"].shape[1]
     page = cfg.page
+    pos = _pos_vec(pos, B)
 
-    # Near tier: occupied slots always form a prefix (BBC fills empty slots
-    # in index order and promotions replace in place), so the live region is
-    # simply count * page.
-    occupied = (cache["page_of_slot"] >= 0)
-    near_len = occupied.sum(axis=1).astype(jnp.int32) * page
+    # Near tier: occupied slots always form a prefix (promotions fill empty
+    # slots in index order and evictions replace in place), so the live
+    # region is simply count * page.
+    near_len = near_token_count(cache, cfg)
 
     out_n, m_n, l_n = _near_stats(q, cache, near_len, cfg)
 
@@ -113,7 +158,7 @@ def tiered_attention(cache: dict, q: jax.Array, pos: jax.Array,
     slots = jnp.arange(T)
     page_of_slot_idx = slots // page                        # (T,)
     promoted = cache["slot_of_page"][:, page_of_slot_idx] >= 0   # (B,T)
-    live = (slots[None, :] < pos) & ~promoted
+    live = (slots[None, :] < pos[:, None]) & ~promoted
     out_f, m_f, l_f = _far_stats(q, cache["far_k"], cache["far_v"], live)
 
     return ref.merge_attention_stats([(out_n, m_n, l_n), (out_f, m_f, l_f)])
@@ -149,14 +194,16 @@ def page_masses(q: jax.Array, cache: dict, pos: jax.Array,
     the interval-sampled activation counts of the paper's BBC.
 
     Returns (B, n_pages) f32 normalized masses over the *whole* cache
-    (near-resident pages included, so retention scores stay fresh)."""
+    (near-resident pages included, so retention scores stay fresh).
+    ``pos`` may be a scalar or a ragged (B,) vector."""
     B, H, hd = q.shape
     k = cache["far_k"]
     T, Hkv = k.shape[1], k.shape[2]
     g = H // Hkv
     qh = q.reshape(B, Hkv, g, hd) * hd ** -0.5
     s = jnp.einsum("bkgd,btkd->bkgt", qh, k).astype(jnp.float32)
-    live = jnp.arange(T)[None, None, None, :] < pos
+    live = (jnp.arange(T)[None, :] < _pos_vec(pos, B)[:, None]
+            )[:, None, None, :]
     s = jnp.where(live, s, ref.NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     p = jnp.where(live, p, 0.0)
@@ -186,7 +233,8 @@ def _copy_pages(near_k, near_v, far_k, far_v, rows, slots, valid, page: int):
 
 
 def plan_and_migrate(cache: dict, q: jax.Array, pos: jax.Array,
-                     cfg: TieredKVConfig, idle=True) -> dict:
+                     cfg: TieredKVConfig, idle=True,
+                     masses: jax.Array | None = None) -> dict:
     """One planning interval: score -> plan -> migrate (vectorized over
     batch) under ``cfg.policy``.
 
@@ -194,15 +242,21 @@ def plan_and_migrate(cache: dict, q: jax.Array, pos: jax.Array,
     Migration is a pure on-device copy — the IST analogue.  ``idle`` is the
     WMC gate: pass False (or a traced bool) when the serving step has no
     spare migration budget; SC/BBC ignore it, STATIC never migrates.
+    ``pos`` may be a scalar or a ragged (B,) vector (the serving engine's
+    slot pool — each slot's complete-page frontier is its own).
+    ``masses``: optionally pass a precomputed ``page_masses(q, ...)`` result
+    (callers that also need the masses for metrics avoid scoring twice).
     """
     if cfg.policy.upper() == "STATIC":
         return cache   # OS-exposed mechanism: no runtime migration, and no
                        # point paying the scoring pass for dead state
     cache = dict(cache)
-    masses = page_masses(q, cache, pos, cfg)
+    if masses is None:
+        masses = page_masses(q, cache, pos, cfg)
     n_pages = masses.shape[1]
-    complete = (jnp.arange(n_pages) + 1) * cfg.page <= pos
-    masses = jnp.where(complete[None, :], masses, 0.0)
+    pos_b = _pos_vec(pos, masses.shape[0])
+    complete = (jnp.arange(n_pages)[None, :] + 1) * cfg.page <= pos_b[:, None]
+    masses = jnp.where(complete, masses, 0.0)
     # EMA in "activations per interval" units: scale mass to a count-like
     # magnitude so TierCosts thresholds behave like the DRAM policy's.
     acts = masses * cfg.interval
@@ -237,21 +291,26 @@ def plan_and_migrate(cache: dict, q: jax.Array, pos: jax.Array,
 
 
 def preload_static_kv(cache: dict, profile_masses: jax.Array,
-                      pos: jax.Array, cfg: TieredKVConfig) -> dict:
+                      pos: jax.Array, cfg: TieredKVConfig,
+                      row_mask: jax.Array | None = None) -> dict:
     """OS-exposed static placement: fill the near tier with the profile's
     hottest pages per sequence (the paper's t=0 profiling step), copying the
     pages in — then serve with ``policy="STATIC"`` (no runtime migration).
 
     profile_masses: (B, n_pages) profiled per-page attention mass.
-    pos: current decode position — only completely-written pages
-    (page_end <= pos) may be pinned, else the near copy would contain
-    unwritten positions that ``tiered_attention`` masks out of the far pass
-    (the same guard ``plan_and_migrate`` applies)."""
+    pos: current decode position (scalar or ragged (B,) vector) — only
+    completely-written pages (page_end <= pos) may be pinned, else the near
+    copy would contain unwritten positions that ``tiered_attention`` masks
+    out of the far pass (the same guard ``plan_and_migrate`` applies).
+    row_mask: optional (B,) bool — only pin these sequences, leaving the
+    others' placements untouched (the serving engine pins each slot once,
+    at its first planning interval after admission)."""
     cache = dict(cache)
     C = cache["page_of_slot"].shape[1]
-    n_pages = profile_masses.shape[1]
-    complete = (jnp.arange(n_pages) + 1) * cfg.page <= pos
-    profile_masses = jnp.where(complete[None, :], profile_masses, 0.0)
+    B, n_pages = profile_masses.shape
+    pos_b = _pos_vec(pos, B)
+    complete = (jnp.arange(n_pages)[None, :] + 1) * cfg.page <= pos_b[:, None]
+    profile_masses = jnp.where(complete, profile_masses, 0.0)
 
     def per_seq(masses, near_k, near_v, far_k, far_v):
         slot_of_page, page_of_slot = preload_static(masses, C)
@@ -262,8 +321,19 @@ def preload_static_kv(cache: dict, profile_masses: jax.Array,
                                      slots, valid, cfg.page)
         return slot_of_page, page_of_slot, near_k, near_v
 
-    (cache["slot_of_page"], cache["page_of_slot"], cache["near_k"],
-     cache["near_v"]) = jax.vmap(per_seq)(
+    new_sop, new_pos_, new_nk, new_nv = jax.vmap(per_seq)(
         profile_masses, cache["near_k"], cache["near_v"], cache["far_k"],
         cache["far_v"])
+    if row_mask is None:
+        cache["slot_of_page"], cache["page_of_slot"] = new_sop, new_pos_
+        cache["near_k"], cache["near_v"] = new_nk, new_nv
+    else:
+        r = row_mask
+        cache["slot_of_page"] = jnp.where(r[:, None], new_sop,
+                                          cache["slot_of_page"])
+        cache["page_of_slot"] = jnp.where(r[:, None], new_pos_,
+                                          cache["page_of_slot"])
+        r4 = r[:, None, None, None]
+        cache["near_k"] = jnp.where(r4, new_nk, cache["near_k"])
+        cache["near_v"] = jnp.where(r4, new_nv, cache["near_v"])
     return cache

@@ -58,6 +58,22 @@ def _near_decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, *,
     l_ref[0, 0, :] = l[:, 0]
 
 
+def _block_geometry(t_near: int, block_kv: int) -> tuple[int, int]:
+    """(block_kv, padded T) for a near buffer of ``t_near`` tokens.
+
+    The buffer is *padded up* to a block multiple rather than the block
+    shrunk to a divisor: halving until ``block_kv`` divides ``t_near``
+    degenerates to 1-2 token blocks whenever ``t_near`` has a large odd
+    factor (e.g. 130 -> block 2), destroying kernel throughput.  Padded
+    slots sit at indices >= t_near >= near_len, so the kernel's
+    ``near_len`` mask already excludes them.
+    """
+    if t_near <= block_kv:
+        return t_near, t_near            # single block, no padding
+    pad = (-t_near) % block_kv
+    return block_kv, t_near + pad
+
+
 def near_decode_attention(q: jax.Array, k_near: jax.Array, v_near: jax.Array,
                           near_len: jax.Array, block_kv: int = 128,
                           interpret: bool = False):
@@ -71,9 +87,11 @@ def near_decode_attention(q: jax.Array, k_near: jax.Array, v_near: jax.Array,
     B, H, hd = q.shape
     T, Hkv = k_near.shape[1], k_near.shape[2]
     g = H // Hkv
-    block_kv = min(block_kv, T)
-    while T % block_kv:          # shrink to a divisor of the near length
-        block_kv //= 2
+    block_kv, T = _block_geometry(T, block_kv)
+    if T > k_near.shape[1]:
+        pad = ((0, 0), (0, T - k_near.shape[1]), (0, 0), (0, 0))
+        k_near = jnp.pad(k_near, pad)
+        v_near = jnp.pad(v_near, pad)
     q4 = q.reshape(B, Hkv, g, hd)
 
     kernel = functools.partial(_near_decode_kernel, block_kv=block_kv,

@@ -64,6 +64,9 @@ def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,
                                       ).astype(jnp.bfloat16)
         x = ctx.constrain(x, ctx.BATCH, None, None)
         pos = cache["pos"]
+        ragged = pos.ndim == 1          # per-slot positions (serving engine)
+        B_all = x.shape[0]
+        pos_b = pos if ragged else jnp.broadcast_to(pos, (B_all,))
         cparams = jax.tree.map(
             lambda a: a.astype(jnp.bfloat16)
             if a.dtype == jnp.float32 and a.ndim > 1 else a,
@@ -77,26 +80,37 @@ def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,
             q = jnp.einsum("bsd,dhk->bshk", normed, p["attn"]["wq"])
             k = jnp.einsum("bsd,dhk->bshk", normed, p["attn"]["wk"])
             v = jnp.einsum("bsd,dhk->bshk", normed, p["attn"]["wv"])
-            positions = jnp.broadcast_to(pos, (h.shape[0], 1))
+            positions = pos_b[:, None]
             q = apply_rope(q, positions, arch.rope_theta)
             k = apply_rope(k, positions, arch.rope_theta)
             T = cl["k"].shape[1]
-            kc = jax.lax.dynamic_update_slice_in_dim(cl["k"], k, pos, 1)
-            vc = jax.lax.dynamic_update_slice_in_dim(cl["v"], v, pos, 1)
+            if ragged:
+                b_idx = jnp.arange(h.shape[0])
+                kc = cl["k"].at[b_idx, pos_b].set(k[:, 0])
+                vc = cl["v"].at[b_idx, pos_b].set(v[:, 0])
+            else:
+                kc = jax.lax.dynamic_update_slice_in_dim(cl["k"], k, pos, 1)
+                vc = jax.lax.dynamic_update_slice_in_dim(cl["v"], v, pos, 1)
 
             B, _, Hkv, hd = k.shape
-            # near tier: contiguous BBC-maintained buffer (read-only here)
+            # near tier: contiguous policy-maintained buffer (read-only
+            # here); occupied slots form a prefix (tests/test_read_path.py)
+            # so per-sequence occupancy is the token count cl["near_len"].
             k_near = cl["near_k"]                     # (B, Tn, Hkv, hd)
             v_near = cl["near_v"]
             # recent window: an incrementally-written ring buffer.  (A
             # dynamic_slice of the big time-sharded cache would make GSPMD
             # all-gather the whole cache per layer — measured 26x worse,
             # docs/experiments.md §Perf cell C iter 2.)
-            slot = pos % window
-            k_win = jax.lax.dynamic_update_slice_in_dim(
-                cl["win_k"], k, slot, 1)
-            v_win = jax.lax.dynamic_update_slice_in_dim(
-                cl["win_v"], v, slot, 1)
+            if ragged:
+                slot = pos_b % window
+                k_win = cl["win_k"].at[b_idx, slot].set(k[:, 0])
+                v_win = cl["win_v"].at[b_idx, slot].set(v[:, 0])
+            else:
+                k_win = jax.lax.dynamic_update_slice_in_dim(
+                    cl["win_k"], k, pos % window, 1)
+                v_win = jax.lax.dynamic_update_slice_in_dim(
+                    cl["win_v"], v, pos % window, 1)
             # Two partial attentions + exact LSE merge: concatenating the
             # two differently-sharded buffers made GSPMD replicate the
             # result per layer (+47 ms collective, docs/experiments.md
@@ -104,10 +118,17 @@ def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,
             # time sharding local.
             from repro.core.tiered_kv import _far_stats
             from repro.kernels import ref as kref
-            B_ = q.shape[0]
             qf = q[:, 0]
-            near_live = jnp.ones((B_, k_near.shape[1]), bool)
-            win_live = jnp.ones((B_, window), bool)
+            # Empty near slots MUST be masked: an all-zero slot would
+            # contribute score-0 logits to the softmax (a real corruption
+            # whenever the near tier is not yet full — pinned by
+            # tests/test_read_path.py::TestNearTierOccupancyMask).
+            near_live = (jnp.arange(k_near.shape[1])[None, :]
+                         < cl["near_len"][:, None])
+            # Ring slots beyond what has been written are dead too (only
+            # matters before steady state, pos < window).
+            win_live = (jnp.arange(window)[None, :]
+                        < jnp.minimum(pos_b + 1, window)[:, None])
             sn = _far_stats(qf, k_near, v_near, near_live)
             sw = _far_stats(qf, k_win, v_win, win_live)
             out = kref.merge_attention_stats([sn, sw])[:, None].astype(q.dtype)
@@ -138,34 +159,44 @@ def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,
 def sparse_cache_extras(arch: ArchConfig, batch: int, seq_len: int,
                         near_pages: int = 8, page: int = 128,
                         dtype=jnp.bfloat16,
-                        tier_cfg: TieredKVConfig | None = None):
+                        tier_cfg: TieredKVConfig | None = None,
+                        window: int = 1024):
     """Extra cache leaves for the sparse tiered decode step: the
     materialized near-tier buffers (maintained between steps by the
-    ``repro.tier`` policy configured in ``tier_cfg``)."""
+    ``repro.tier`` policy configured in ``tier_cfg``) plus ``near_len``,
+    the per-sequence count of live near-tier tokens (occupied slots form a
+    prefix, so one count per sequence fully describes occupancy)."""
     if tier_cfg is not None:
         near_pages, page = tier_cfg.near_pages, tier_cfg.page
     L = arch.n_layers
     hd = arch.resolved_head_dim
     tn = near_pages * page
-    window = 1024
     return {
         "near_k": jnp.zeros((L, batch, tn, arch.n_kv_heads, hd), dtype),
         "near_v": jnp.zeros((L, batch, tn, arch.n_kv_heads, hd), dtype),
+        "near_len": jnp.zeros((L, batch), jnp.int32),
         "win_k": jnp.zeros((L, batch, window, arch.n_kv_heads, hd), dtype),
         "win_v": jnp.zeros((L, batch, window, arch.n_kv_heads, hd), dtype),
     }
 
 
 def greedy_generate(params, arch: ArchConfig, prompt_batch: dict,
-                    steps: int, max_len: int):
-    """Simple batched greedy generation driver (examples/tests)."""
-    logits, cache = transformer.prefill(params, prompt_batch, arch,
-                                        max_len=max_len)
+                    steps: int, max_len: int, step_fn=None,
+                    prefill_fn=None):
+    """Simple batched greedy generation driver (examples/tests).
+
+    ``step_fn`` / ``prefill_fn``: optionally pass pre-jitted step functions
+    so repeated calls (e.g. the serving benchmark's sequential baseline)
+    don't recompile or dispatch eagerly — the computation is identical."""
+    if prefill_fn is None:
+        prefill_fn = lambda p, b: transformer.prefill(p, b, arch,
+                                                      max_len=max_len)
+    logits, cache = prefill_fn(params, prompt_batch)
     if arch.family == "audio":
         raise NotImplementedError("audio generation uses frame embeddings")
     tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
     out = [tok]
-    step = jax.jit(make_decode_step(arch))
+    step = step_fn if step_fn is not None else jax.jit(make_decode_step(arch))
     for _ in range(steps - 1):
         logits, cache = step(params, cache, {"tokens": tok})
         tok = jnp.argmax(logits[:, -1:, :], axis=-1).astype(jnp.int32)[:, :, 0] \

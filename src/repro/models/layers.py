@@ -175,8 +175,10 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     """Single-token attention against a (possibly ring-buffer) KV cache.
 
     q: (B,1,H,hd); caches: (B,T,Hkv,hd); pos: scalar int32 — the absolute
-    position of the current token.  With window>0 the cache is a ring buffer
-    of size T=window whose slot for absolute position p is p % window.
+    position of the current token — or a ragged (B,) vector of per-sequence
+    positions (continuous-batching slot pools).  With window>0 the cache is
+    a ring buffer of size T=window whose slot for absolute position p is
+    p % window.
     """
     B, _, H, hd = q.shape
     T, Hkv = k_cache.shape[1], k_cache.shape[2]
@@ -185,13 +187,15 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     qh = (q[:, 0] * scale).reshape(B, Hkv, groups, hd)
 
     scores = jnp.einsum("bkgd,btkd->bkgt", qh, k_cache).astype(jnp.float32)
-    slots = jnp.arange(T)
+    slots = jnp.arange(T)[None, :]                           # (1,T)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]  # (B,1)
     if window:
-        abs_pos = pos - ((pos - slots) % window)   # absolute pos held per slot
-        valid = (abs_pos >= 0) & (abs_pos <= pos) & (pos - abs_pos < window)
+        abs_pos = pos_b - ((pos_b - slots) % window)  # absolute pos per slot
+        valid = ((abs_pos >= 0) & (abs_pos <= pos_b)
+                 & (pos_b - abs_pos < window))
     else:
-        valid = slots <= pos
-    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+        valid = slots <= pos_b
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
     out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache)
     return out.reshape(B, 1, H, hd).astype(q.dtype)

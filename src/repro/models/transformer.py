@@ -175,18 +175,31 @@ def _block_train(p, x, positions, arch: ArchConfig):
 
 
 def _block_decode(p, x, cache_layer, pos, arch: ArchConfig):
-    """One layer, single-token decode.  cache_layer is this layer's slice."""
+    """One layer, single-token decode.  cache_layer is this layer's slice.
+
+    ``pos`` is a scalar position, or a ragged (B,) vector of per-sequence
+    positions (the continuous-batching slot pool).  Returns
+    (h, new_cache, q) — q is this layer's rotated query (attention
+    families; None for ssm), used by the serving engine's tier scoring.
+    """
     new_cache = dict(cache_layer)
-    positions = jnp.broadcast_to(pos, (x.shape[0], 1))
-    if arch.mrope:
-        positions = jnp.broadcast_to(pos, (x.shape[0], 1, 3))
+    ragged = jnp.asarray(pos).ndim == 1
+    if ragged:
+        positions = pos[:, None]
+        if arch.mrope:
+            positions = jnp.broadcast_to(positions[..., None],
+                                         (x.shape[0], 1, 3))
+    else:
+        positions = jnp.broadcast_to(pos, (x.shape[0], 1))
+        if arch.mrope:
+            positions = jnp.broadcast_to(pos, (x.shape[0], 1, 3))
 
     if arch.family == "ssm":
         h, state, conv = ssm_lib.ssd_decode_step(
             p["ssm"], rms_norm(x, p["ssm_norm"]),
             cache_layer["ssm"], cache_layer["conv"], arch.ssm)
         new_cache.update(ssm=state, conv=conv)
-        return x + h, new_cache
+        return x + h, new_cache, None
 
     normed = rms_norm(x, p["attn_norm"])
     # write the new token's K/V into the cache slot, then attend
@@ -204,8 +217,15 @@ def _block_decode(p, x, cache_layer, pos, arch: ArchConfig):
         k = apply_rope(k, positions, arch.rope_theta)
     T = cache_layer["k"].shape[1]
     slot = pos % T if arch.sliding_window else jnp.minimum(pos, T - 1)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache_layer["k"], k, slot, 1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache_layer["v"], v, slot, 1)
+    if ragged:
+        b_idx = jnp.arange(x.shape[0])
+        k_cache = cache_layer["k"].at[b_idx, slot].set(k[:, 0])
+        v_cache = cache_layer["v"].at[b_idx, slot].set(v[:, 0])
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_layer["k"], k, slot, 1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache_layer["v"], v, slot, 1)
     new_cache.update(k=k_cache, v=v_cache)
     out = decode_attention(q, k_cache, v_cache, pos,
                            window=arch.sliding_window)
@@ -230,7 +250,7 @@ def _block_decode(p, x, cache_layer, pos, arch: ArchConfig):
         mlp_out = swiglu(p["mlp"], normed2)
     else:
         mlp_out = gelu_mlp(p["mlp"], normed2)
-    return x + mlp_out, new_cache
+    return x + mlp_out, new_cache, q
 
 
 # ---------------------------------------------------------------------------
@@ -377,10 +397,17 @@ def prefill(params: Params, batch: dict, arch: ArchConfig, max_len: int,
 
 
 def decode_step(params: Params, cache: Cache, batch: dict, arch: ArchConfig,
-                compute_dtype=jnp.bfloat16):
+                compute_dtype=jnp.bfloat16, want_aux: bool = False):
     """One decode step.  batch['tokens']: (B, 1) (or frame_embeds (B,1,D)).
 
-    Returns (logits (B,1,V...), new cache)."""
+    ``cache['pos']`` may be a scalar (whole batch at one position) or a
+    ragged (B,) vector of per-sequence positions (continuous-batching slot
+    pools; each sequence attends its own live prefix and writes its K/V at
+    its own slot).
+
+    Returns (logits (B,1,V...), new cache); with ``want_aux=True`` also a
+    third aux dict with ``q0`` — layer-0's rotated query (B,H,hd), the
+    probe the tiered-KV scoring pass uses (attention families only)."""
     x = _embed_inputs(params, batch, arch).astype(compute_dtype)
     x = ctx.constrain(x, ctx.BATCH, ctx.SEQ, None)
     pos = cache["pos"]
@@ -394,14 +421,17 @@ def decode_step(params: Params, cache: Cache, batch: dict, arch: ArchConfig,
     def body(h, scanned):
         layer_params, cl = scanned
         h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
-        h, new_cl = _block_decode(layer_params, h, cl, pos, arch)
+        h, new_cl, q = _block_decode(layer_params, h, cl, pos, arch)
         h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
-        return h, new_cl
+        return h, (new_cl, q if want_aux else None)
 
-    x, new_layer_cache = jax.lax.scan(body, x, (cparams, layer_cache))
+    x, (new_layer_cache, qs) = jax.lax.scan(body, x, (cparams, layer_cache))
     x = rms_norm(x, params["final_norm"].astype(compute_dtype))
     logits = _lm_logits(params, x, arch)
     logits = ctx.constrain(logits, ctx.BATCH,
                            *([None] * (logits.ndim - 2)), ctx.MODEL)
     new_cache = {**new_layer_cache, "pos": pos + 1}
+    if want_aux:
+        aux = {"q0": qs[0][:, 0].astype(jnp.float32)} if qs is not None else {}
+        return logits, new_cache, aux
     return logits, new_cache

@@ -1,0 +1,12 @@
+"""Continuous-batching tiered-KV serving runtime (docs/design.md §2c)."""
+
+from repro.serve.engine import (ServingConfig, ServingEngine,
+                                sequential_baseline)
+from repro.serve.metrics import CostModel, ServingReport, percentiles
+from repro.serve.trace import SCENARIOS, Request
+
+__all__ = [
+    "ServingConfig", "ServingEngine", "sequential_baseline",
+    "CostModel", "ServingReport", "percentiles",
+    "SCENARIOS", "Request",
+]

@@ -1,0 +1,295 @@
+"""Continuous-batching tiered-KV serving engine (the TL-DRAM runtime).
+
+The paper's near segment only pays off when many concurrent accesses share
+the fast path; the serving analogue is a *slot pool*: a fixed batch of
+decode slots that independent sequences are admitted into and retired from,
+so one batched decode step serves every in-flight sequence at once (ragged
+``pos`` — each slot sits at its own position), while the unified
+`repro.tier` engine migrates each slot's hot KV pages into the near tier on
+a background cadence.
+
+Scheduler loop (``ServingEngine.run``):
+
+  admit    : pop arrived requests into free slots — prefill (bucketed jit)
+             into the slot's rows of the pool cache, seed the first token.
+  decode   : ONE batched ``transformer.decode_step`` with per-slot ``pos``
+             (ragged state threaded through RoPE, cache scatter and the
+             attention mask) emits a token for every active slot.
+  maintain : every ``tier.interval`` steps, score per-page attention mass
+             with the step's layer-0 queries and run the configured policy
+             (SC/WMC/BBC via ``plan_and_migrate``; STATIC pins each slot
+             once at its first interval) — the amortized IST.
+  retire   : finished sequences free their slot (tier state reset so the
+             next tenant inherits nothing); the slot is reused.
+
+The decode path is *exact* (full-cache attention with ragged masks), so
+emitted tokens match the single-sequence ``greedy_generate`` reference
+bit-for-bit; the tiered state drives the byte-cost model and, optionally, a
+read-path verification probe (``verify_tiered_read``).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import tiered_kv as tkv
+from repro.core.tiered_kv import TieredKVConfig
+from repro.kernels import ref
+from repro.models import transformer
+from repro.serve.metrics import CostModel, ServingReport
+from repro.serve.trace import Request
+
+
+@dataclass
+class ServingConfig:
+    n_slots: int = 4
+    max_len: int = 256
+    prefill_bucket: int = 32      # prompt lengths pad up to a multiple of
+                                  # this (bounds jit recompiles; exact —
+                                  # causal attention ignores the pad tail)
+    tier: TieredKVConfig = field(default_factory=TieredKVConfig)
+    cost: CostModel = field(default_factory=CostModel)
+    verify_tiered_read: bool = False   # probe tiered read vs monolithic
+                                       # attention at every planning pass
+
+
+@dataclass
+class _Slot:
+    req: Request
+    emitted: list
+    last_emit: float              # modeled clock of the last emitted token
+
+
+class ServingEngine:
+    def __init__(self, params, arch: ArchConfig, cfg: ServingConfig):
+        assert arch.n_heads and arch.ssm is None, \
+            "serving engine requires an attention-family architecture"
+        assert not arch.sliding_window, \
+            "ragged slot pool + ring buffer not supported yet"
+        assert cfg.max_len % cfg.tier.page == 0, \
+            "max_len must be a page multiple"
+        self.params, self.arch, self.cfg = params, arch, cfg
+        self._decode = jax.jit(
+            lambda p, c, b: transformer.decode_step(p, c, b, arch,
+                                                    want_aux=True))
+        self._plan = jax.jit(
+            lambda c, q, pos, idle, m: tkv.plan_and_migrate(
+                c, q, pos, cfg.tier, idle=idle, masses=m))
+        self._masses = jax.jit(
+            lambda q, c, pos: tkv.page_masses(q, c, pos, cfg.tier))
+        # jax.jit caches per input shape, so one wrapper covers every
+        # prompt-length bucket
+        self._prefill = jax.jit(
+            lambda p, b: transformer.prefill(p, b, arch,
+                                             max_len=cfg.max_len))
+
+    def _admit(self, req: Request, slot: int, clock: float) -> float:
+        cfg = self.cfg
+        S = int(req.prompt.shape[0])
+        assert S + req.max_new_tokens <= cfg.max_len, \
+            f"request {req.rid} does not fit max_len={cfg.max_len}"
+        s_pad = -(-S // cfg.prefill_bucket) * cfg.prefill_bucket
+        padded = np.zeros((1, s_pad), np.int32)
+        padded[0, :S] = req.prompt
+        logits, pcache = self._prefill(self.params, {"tokens": padded})
+        first = int(jnp.argmax(logits[0, S - 1]))
+        # write the sequence's K/V rows into the pool (positions >= S are
+        # zero-padded by prefill and masked by the ragged live mask)
+        self.cache["k"] = self.cache["k"].at[:, slot].set(pcache["k"][:, 0])
+        self.cache["v"] = self.cache["v"].at[:, slot].set(pcache["v"][:, 0])
+        self.pos[slot] = S
+        self.tok[slot] = first
+        self._static_pinned[slot] = False
+        clock += cfg.cost.prefill_cost(S)
+        self.slots[slot] = _Slot(req=req, emitted=[first], last_emit=clock)
+        self.report.token_latencies.append(
+            clock - self._visible_clock[req.rid])
+        self.report.tokens += 1
+        self.slot_history.setdefault(slot, []).append(req.rid)
+        return clock
+
+    def _retire(self, slot: int):
+        st = self.slots[slot]
+        self.report.outputs[st.req.rid] = list(st.emitted)
+        self.slots[slot] = None
+        self.pos[slot] = 0
+        self.tok[slot] = 0
+        self._near_tokens[slot] = 0
+        # clear tier state NOW, not at the next admit: the dead tenant's
+        # decayed scores would otherwise stay promotion-eligible and keep
+        # the planning pass migrating (and billing) its stale pages
+        self.tiered = tkv.reset_sequences(
+            self.tiered, jnp.arange(self.cfg.n_slots) == slot)
+        self.free.append(slot)
+        self.free.sort()
+
+    # -- background tier maintenance ----------------------------------------
+
+    def _maintain(self, q0, clock: float, idle: bool) -> float:
+        cfg = self.cfg
+        tier = cfg.tier
+        active = np.array([s is not None for s in self.slots])
+        self.tiered["far_k"] = self.cache["k"][0]
+        self.tiered["far_v"] = self.cache["v"][0]
+        pos_vec = jnp.asarray(self.pos, jnp.int32)
+        # one scoring pass per interval: page_masses reads only the far
+        # master copy (migration never changes it), so the same masses
+        # drive planning/pinning AND the hit-mass metric below
+        masses_dev = self._masses(q0, self.tiered, pos_vec)
+        if tier.policy.upper() == "STATIC":
+            need = jnp.asarray(active & ~self._static_pinned)
+            if bool(need.any()):
+                self.tiered = tkv.preload_static_kv(
+                    self.tiered, masses_dev, pos_vec, tier, row_mask=need)
+                moved = int(np.asarray(
+                    self.tiered["page_of_slot"] >= 0)[np.asarray(need)].sum())
+                clock += cfg.cost.migration_cost(moved, tier.page)
+                self.report.migrations += moved   # pin copies are ISTs too
+                self._static_pinned |= np.asarray(need)
+        else:
+            before = int(self.tiered["migrations"])
+            self.tiered = self._plan(self.tiered, q0, pos_vec, idle,
+                                     masses_dev)
+            moved = int(self.tiered["migrations"]) - before
+            clock += cfg.cost.migration_cost(moved, tier.page)
+            self.report.migrations += moved
+        occupied = np.asarray(self.tiered["page_of_slot"] >= 0)
+        self._near_tokens = occupied.sum(axis=1) * tier.page
+        # near-tier hit mass over active slots (the paper's near-segment
+        # hit rate, in attention-mass units)
+        if active.any():
+            masses = np.asarray(masses_dev)
+            promoted = np.asarray(self.tiered["slot_of_page"] >= 0)
+            tot = masses[active].sum()
+            if tot > 0:
+                self.report.near_hit_mass.append(
+                    float((masses * promoted)[active].sum() / tot))
+            if cfg.verify_tiered_read:
+                got = tkv.tiered_attention(self.tiered, q0, pos_vec, tier)
+                want = ref.decode_attention_ref(
+                    q0[:, None], self.tiered["far_k"], self.tiered["far_v"],
+                    pos_vec)[:, 0]
+                err = float(jnp.max(jnp.abs(
+                    (got - want)[jnp.asarray(active)])))
+                self.report.max_read_err = max(self.report.max_read_err, err)
+        return clock
+
+    # -- driver --------------------------------------------------------------
+
+    def run(self, trace: list[Request], scenario: str = "trace") -> ServingReport:
+        """Replay an offline arrival trace to completion."""
+        cfg = self.cfg
+        self.report = ServingReport(scenario=scenario,
+                                    policy=cfg.tier.policy,
+                                    n_requests=len(trace))
+        self.cache = transformer.init_cache(self.arch, cfg.n_slots,
+                                            cfg.max_len)
+        self.tiered = tkv.init_tiered_cache(self.cache["k"][0],
+                                            self.cache["v"][0], cfg.tier)
+        self.pos = np.zeros(cfg.n_slots, np.int64)
+        self.tok = np.zeros(cfg.n_slots, np.int64)
+        self.slots: list[_Slot | None] = [None] * cfg.n_slots
+        self.free = list(range(cfg.n_slots))
+        self.slot_history = {}
+        self._near_tokens = np.zeros(cfg.n_slots, np.int64)
+        self._static_pinned = np.zeros(cfg.n_slots, bool)
+        self._visible_clock: dict[int, float] = {}
+
+        queue = deque(sorted(trace, key=lambda r: (r.arrival, r.rid)))
+        tick, clock, steps = 0, 0.0, 0
+        t0 = time.perf_counter()
+        while queue or any(s is not None for s in self.slots):
+            for req in queue:                  # sorted by arrival: stop early
+                if req.arrival > tick:
+                    break
+                if req.rid not in self._visible_clock:
+                    self._visible_clock[req.rid] = clock
+            while queue and queue[0].arrival <= tick and self.free:
+                clock = self._admit(queue.popleft(), self.free.pop(0), clock)
+            # a request may want exactly the prefill token (max_new_tokens=1)
+            for b in range(cfg.n_slots):
+                st = self.slots[b]
+                if st is not None and len(st.emitted) >= st.req.max_new_tokens:
+                    self._retire(b)
+            active_idx = [b for b, s in enumerate(self.slots) if s is not None]
+            if not active_idx:
+                if queue:
+                    tick = max(tick + 1, queue[0].arrival)  # idle fast-forward
+                continue
+
+            self.cache["pos"] = jnp.asarray(self.pos, jnp.int32)
+            logits, new_cache, aux = self._decode(
+                self.params, self.cache, {"tokens": jnp.asarray(
+                    self.tok[:, None], jnp.int32)})
+            self.cache = new_cache
+            toks = np.asarray(jnp.argmax(logits, axis=-1))[:, 0]
+
+            live = self.pos[active_idx] + 1
+            clock += cfg.cost.decode_step_cost(
+                self._near_tokens[active_idx], live)
+            steps += 1
+            for b in active_idx:
+                st = self.slots[b]
+                st.emitted.append(int(toks[b]))
+                self.report.token_latencies.append(clock - st.last_emit)
+                st.last_emit = clock
+                self.report.tokens += 1
+                self.pos[b] += 1
+                self.tok[b] = int(toks[b])
+                if len(st.emitted) >= st.req.max_new_tokens:
+                    self._retire(b)
+            if steps % cfg.tier.interval == 0:
+                idle = not (queue and queue[0].arrival <= tick)
+                clock = self._maintain(aux["q0"], clock, idle)
+            tick += 1
+
+        self.report.steps = steps
+        self.report.wall_s = time.perf_counter() - t0
+        self.report.modeled_time = clock
+        self.report.slot_history = dict(self.slot_history)
+        return self.report
+
+
+def sequential_baseline(params, arch: ArchConfig, trace: list[Request],
+                        cfg: ServingConfig,
+                        scenario: str = "trace") -> ServingReport:
+    """The no-batching reference: each request served to completion by
+    single-sequence ``greedy_generate`` (B=1), one after another, under the
+    same modeled cost landscape (no near tier: every live KV token is
+    gather-addressed at ``far_cost``)."""
+    from repro.launch.serve import greedy_generate, make_decode_step
+    report = ServingReport(scenario=scenario, policy="sequential",
+                           n_requests=len(trace))
+    step_fn = jax.jit(make_decode_step(arch))
+    prefill_fn = jax.jit(
+        lambda p, b: transformer.prefill(p, b, arch, max_len=cfg.max_len))
+    clock = 0.0
+    t0 = time.perf_counter()
+    for req in sorted(trace, key=lambda r: (r.arrival, r.rid)):
+        toks, _ = greedy_generate(
+            params, arch, {"tokens": np.asarray(req.prompt)[None]},
+            steps=req.max_new_tokens, max_len=cfg.max_len, step_fn=step_fn,
+            prefill_fn=prefill_fn)
+        report.outputs[req.rid] = np.asarray(toks)[0].tolist()
+        S = int(req.prompt.shape[0])
+        clock += cfg.cost.prefill_cost(S)
+        last = clock
+        report.tokens += 1
+        report.token_latencies.append(0.0)   # no queueing modeled: TTFT = 0
+        for i in range(1, req.max_new_tokens):
+            clock += cfg.cost.decode_step_cost(np.zeros(1),
+                                               np.asarray([S + i]))
+            report.token_latencies.append(clock - last)
+            last = clock
+            report.tokens += 1
+        report.steps += req.max_new_tokens - 1
+    report.wall_s = time.perf_counter() - t0
+    report.modeled_time = clock
+    return report

@@ -1,0 +1,103 @@
+"""Modeled byte-cost accounting + report types for the serving engine.
+
+The cost model extends the tier cost landscape (`repro.tier.costs`, units:
+relative byte-costs — only ratios matter) from the per-access level to the
+per-decode-step level:
+
+  step cost     = ``step_overhead``                (weight streaming: decode
+                                                    is weight-bandwidth-bound
+                                                    at small batch — the term
+                                                    continuous batching
+                                                    amortizes)
+                + per-slot KV read cost            (near tokens at
+                                                    ``near_cost``, the rest of
+                                                    the live prefix
+                                                    gather-addressed at
+                                                    ``far_cost``)
+  prefill cost  = ``prefill_token_cost`` x prompt tokens + ``step_overhead``
+  migration     = pages moved x page x ``migrate_cost`` (the IST bill)
+
+Latency-per-token is the modeled-clock gap between a token and the previous
+token of the same sequence (first token: gap since the request's arrival —
+queueing delay included), which is how serving systems report inter-token
+latency and TTFT.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.tier import TierCosts
+from repro.core.tiered_kv import DEFAULT_COSTS
+
+
+@dataclass
+class CostModel:
+    step_overhead: float = 2048.0   # weight-stream cost per decode step
+    prefill_token_cost: float = 2.0
+    tier: TierCosts = DEFAULT_COSTS
+
+    def decode_step_cost(self, near_tokens: np.ndarray,
+                         live_tokens: np.ndarray) -> float:
+        """near_tokens/live_tokens: per-active-slot arrays (near <= live)."""
+        far = np.maximum(live_tokens - near_tokens, 0)
+        kv = (near_tokens * self.tier.near_cost + far * self.tier.far_cost)
+        return float(self.step_overhead + kv.sum())
+
+    def prefill_cost(self, prompt_tokens: int) -> float:
+        return self.step_overhead + self.prefill_token_cost * prompt_tokens
+
+    def migration_cost(self, pages_moved: int, page: int) -> float:
+        return float(pages_moved) * page * self.tier.migrate_cost
+
+
+def percentiles(xs, qs=(50, 99)) -> tuple[float, ...]:
+    if not len(xs):
+        return tuple(float("nan") for _ in qs)
+    return tuple(float(np.percentile(np.asarray(xs, np.float64), q))
+                 for q in qs)
+
+
+@dataclass
+class ServingReport:
+    scenario: str
+    policy: str
+    n_requests: int
+    tokens: int = 0
+    steps: int = 0                   # batched decode steps executed
+    wall_s: float = 0.0
+    modeled_time: float = 0.0        # byte-cost clock at completion
+    token_latencies: list = field(default_factory=list)   # modeled units
+    near_hit_mass: list = field(default_factory=list)     # per planning pass
+    migrations: int = 0
+    outputs: dict = field(default_factory=dict)           # rid -> [tokens]
+    slot_history: dict = field(default_factory=dict)      # slot -> [rids]
+    max_read_err: float = 0.0        # tiered read-path verification residual
+
+    @property
+    def tokens_per_s_wall(self) -> float:
+        return self.tokens / max(self.wall_s, 1e-9)
+
+    @property
+    def tokens_per_cost(self) -> float:
+        """Modeled throughput: tokens per unit of byte-cost."""
+        return self.tokens / max(self.modeled_time, 1e-9)
+
+    @property
+    def mean_hit_mass(self) -> float:
+        return float(np.mean(self.near_hit_mass)) if self.near_hit_mass \
+            else 0.0
+
+    def summary_row(self) -> tuple:
+        p50, p99 = percentiles(self.token_latencies)
+        return (self.scenario, self.policy, self.tokens,
+                round(self.tokens_per_s_wall, 1),
+                round(self.tokens_per_cost * 1e3, 3),
+                round(self.mean_hit_mass, 3), self.migrations,
+                round(p50, 1), round(p99, 1))
+
+    HEADER = ("scenario", "policy", "tokens", "tok/s_wall",
+              "tok/kcost_modeled", "near_hit_mass", "migrations",
+              "p50_lat", "p99_lat")

@@ -1,0 +1,107 @@
+"""Arrival traces for the continuous-batching serving engine.
+
+A trace is a list of :class:`Request` sorted by arrival tick.  Arrival
+times are expressed in *engine decode-step ticks* (the engine's scheduling
+quantum); the modeled byte-cost clock (``repro.serve.metrics``) is layered
+on top by the engine itself, so traces stay independent of the cost model.
+
+Scenario builders mirror the workload classes of the DRAM-side benchmark
+suite (docs/design.md §2a): a steady Zipfian stream (the serving twin of the
+paper's ``hot`` class), bursty arrivals (admission-control stress), a
+long-context straggler mix (slot-pool fragmentation stress), and a shifting
+hotspot (eviction/migration churn — the scenario that separates the four
+tier policies the way the paper's Fig 8 does).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    rid: int
+    arrival: int                  # engine step tick the request arrives at
+    prompt: np.ndarray            # (S,) int32 token ids
+    max_new_tokens: int
+
+
+def _zipf_tokens(rng: np.random.Generator, vocab: int, n: int,
+                 alpha: float = 1.3, head_offset: int = 0) -> np.ndarray:
+    """Zipfian token draws: a small hot set dominates, like real prompt
+    distributions.  ``head_offset`` rotates which tokens form the head
+    (used by the shifting-hotspot scenario)."""
+    ranks = np.arange(1, vocab + 1)
+    p = ranks ** -alpha
+    p /= p.sum()
+    draws = rng.choice(vocab, size=n, p=p)
+    return ((draws + head_offset) % vocab).astype(np.int32)
+
+
+def steady_zipfian(vocab: int, n_requests: int = 12, prompt_len: int = 24,
+                   max_new_tokens: int = 16, gap: int = 2,
+                   seed: int = 0) -> list[Request]:
+    """Steady arrivals (one every ``gap`` ticks), Zipfian prompt content —
+    the scenario the >= 2x continuous-batching acceptance is measured on."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, arrival=i * gap,
+                    prompt=_zipf_tokens(rng, vocab, prompt_len),
+                    max_new_tokens=max_new_tokens)
+            for i in range(n_requests)]
+
+
+def bursty(vocab: int, n_requests: int = 12, prompt_len: int = 24,
+           max_new_tokens: int = 16, burst: int = 4, burst_gap: int = 20,
+           seed: int = 1) -> list[Request]:
+    """Whole bursts arrive at once, then silence: queueing delay shows up
+    in first-token latency, and the slot pool oversubscribes."""
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, arrival=(i // burst) * burst_gap,
+                    prompt=_zipf_tokens(rng, vocab, prompt_len),
+                    max_new_tokens=max_new_tokens)
+            for i in range(n_requests)]
+
+
+def long_context_stragglers(vocab: int, n_requests: int = 10,
+                            prompt_len: int = 16, max_new_tokens: int = 12,
+                            straggler_every: int = 4, long_factor: int = 4,
+                            seed: int = 2) -> list[Request]:
+    """Mostly short requests plus periodic long-prompt, long-generation
+    stragglers that pin a slot for many ticks."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        straggler = (i % straggler_every) == (straggler_every - 1)
+        plen = prompt_len * (long_factor if straggler else 1)
+        gen = max_new_tokens * (2 if straggler else 1)
+        reqs.append(Request(rid=i, arrival=i * 2,
+                            prompt=_zipf_tokens(rng, vocab, plen),
+                            max_new_tokens=gen))
+    return reqs
+
+
+def shifting_hotspot(vocab: int, n_requests: int = 12, prompt_len: int = 24,
+                     max_new_tokens: int = 16, gap: int = 2,
+                     seed: int = 3) -> list[Request]:
+    """The Zipf head rotates halfway through the stream: policies that
+    never evict (STATIC) or evict eagerly (SC) separate from BBC here,
+    exactly as on the paper's policy comparison."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        offset = 0 if i < n_requests // 2 else vocab // 2
+        reqs.append(Request(rid=i, arrival=i * gap,
+                            prompt=_zipf_tokens(rng, vocab, prompt_len,
+                                                head_offset=offset),
+                            max_new_tokens=max_new_tokens))
+    return reqs
+
+
+SCENARIOS = {
+    "steady_zipfian": steady_zipfian,
+    "bursty": bursty,
+    "long_context_stragglers": long_context_stragglers,
+    "shifting_hotspot": shifting_hotspot,
+}
