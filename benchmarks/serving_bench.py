@@ -11,10 +11,15 @@ engine (`repro.serve`), reporting per cell:
   p50 / p99 latency     : modeled per-token latency (inter-token gaps;
                           first token includes queueing + prefill).
 
-Plus the continuous-vs-sequential acceptance cell: on the steady-Zipfian
-scenario the engine must sustain >= 2x the aggregate tokens/s of serving
-the same trace with single-sequence ``greedy_generate`` calls, with every
-emitted token identical to that reference.
+Plus two acceptance cells:
+
+  continuous_vs_sequential : on steady Zipfian the engine must sustain
+      >= 2x the aggregate tokens/s of single-sequence ``greedy_generate``
+      serving, token-identical to that reference.
+  prefix_sharing : on the shared-system-prompt trace the radix prefix
+      cache (``repro.serve.prefix``) must cut prefilled tokens >= 40% and
+      improve modeled p50 TTFT vs the non-sharing engine, with emitted
+      tokens bit-identical (ISSUE 3 acceptance).
 
   PYTHONPATH=src python -m benchmarks.serving_bench
 """
@@ -40,11 +45,11 @@ def _setup(arch_name="qwen3-1.7b", seed=0):
 
 
 def _config(policy: str, n_slots=6, max_len=128, page=16, near_pages=2,
-            interval=4) -> ServingConfig:
+            interval=4, share=False) -> ServingConfig:
     tier = TieredKVConfig(page=page, near_pages=near_pages,
                           interval=interval, policy=policy)
     return ServingConfig(n_slots=n_slots, max_len=max_len,
-                         prefill_bucket=16, tier=tier)
+                         prefill_bucket=16, tier=tier, share_prefix=share)
 
 
 def _traces(vocab: int):
@@ -107,9 +112,50 @@ def bench_continuous_vs_sequential(arch_name="qwen3-1.7b", policy="BBC"):
     ]
 
 
+def bench_prefix_sharing(arch_name="qwen3-1.7b", policy="BBC"):
+    """Acceptance cell: shared-system-prompt trace through the sharing and
+    non-sharing engines — >= 40% fewer prefilled tokens, better modeled p50
+    TTFT, bit-identical emitted tokens.  A multi-turn-chat cell reports the
+    re-arrival hit rate alongside."""
+    arch, params = _setup(arch_name)
+    trace = SCENARIOS["shared_system_prompt"](
+        arch.vocab, n_requests=10, sys_len=64, user_len=16,
+        max_new_tokens=12, gap=2)
+    base_eng = ServingEngine(params, arch, _config(policy))
+    share_eng = ServingEngine(params, arch, _config(policy, share=True))
+    base_eng.run(trace, "warmup")
+    base = base_eng.run(trace, "shared_system_prompt")
+    share_eng.run(trace, "warmup")
+    share = share_eng.run(trace, "shared_system_prompt")
+    assert base.outputs == share.outputs, \
+        "prefix sharing changed emitted tokens"
+    saved = share.prefill_saved_frac
+    assert saved >= 0.4, f"only {saved:.0%} prefill tokens saved"
+    assert share.p50_ttft < base.p50_ttft, \
+        f"p50 TTFT regressed: {share.p50_ttft} vs {base.p50_ttft}"
+
+    chat = SCENARIOS["multi_turn_chat"](arch.vocab, n_sessions=3, turns=3,
+                                        base_len=32, turn_len=16,
+                                        max_new_tokens=8, think_gap=24)
+    chat_eng = ServingEngine(params, arch, _config(policy, share=True))
+    chat_eng.run(chat, "warmup")
+    chat_rep = chat_eng.run(chat, "multi_turn_chat")
+    return [
+        ("prefix_sharing", "prefill_tokens_saved_frac", round(saved, 3)),
+        ("prefix_sharing", "prefix_hit_rate",
+         round(share.prefix_hit_rate, 3)),
+        ("prefix_sharing", "p50_ttft_base", round(base.p50_ttft, 1)),
+        ("prefix_sharing", "p50_ttft_sharing", round(share.p50_ttft, 1)),
+        ("prefix_sharing", "outputs_identical", base.outputs == share.outputs),
+        ("prefix_sharing", "chat_prefix_hit_rate",
+         round(chat_rep.prefix_hit_rate, 3)),
+    ]
+
+
 def run_all():
     rows = [ServingReport.HEADER] + bench_scenarios()
     rows += bench_continuous_vs_sequential()
+    rows += bench_prefix_sharing()
     for r in rows:
         print(",".join(str(x) for x in r))
     return rows

@@ -22,16 +22,31 @@ KV pages are immutable once written, so evictions are always clean (the
 paper's dirty-eviction write-back IST never triggers for this workload — a
 fact we note rather than hide).
 
+Two far-tier layouts share the policy machinery:
+
+  monolithic : the original per-slot (B, T, Hkv, hd) buffer — every
+               sequence owns private copies of its pages (top half of this
+               module).
+  paged      : a refcounted shared page pool with per-slot page tables and
+               a GLOBAL near tier scored by aggregate attention mass
+               (docs/design.md §2d; the `paged_*` functions + `PagePool`
+               below).  Shared prompt prefixes are stored once and
+               promoted once for all tenants — the serving engine's
+               default since PR 3, fed by `repro.serve.prefix`.
+
 Correctness invariant (tested): near+far partitioned attention with LSE merge
-is *exactly* standard attention over the full cache.
+is *exactly* standard attention over the full cache — in both layouts
+(tests/test_read_path.py, tests/test_paged_read_path.py).
 """
 
 from __future__ import annotations
 
+from collections import deque
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.tier import TierCosts, ema_update
 from repro.tier.jax_engine import (apply_promotions, plan_promotions,
@@ -49,11 +64,16 @@ DEFAULT_COSTS = TierCosts(near_cost=1.0, far_cost=4.0, migrate_cost=8.0,
 @dataclass
 class TieredKVConfig:
     page: int = 128               # tokens per page
-    near_pages: int = 8           # near-tier capacity (pages per sequence)
+    near_pages: int = 8           # near-tier capacity: pages per sequence
+                                  # (monolithic mode) or total pages shared
+                                  # by the whole pool (paged mode)
     interval: int = 16            # decode steps between planning passes
     max_promotions: int = 2       # migrations per planning pass
     policy: str = "BBC"           # SC | WMC | BBC | STATIC
     costs: TierCosts = DEFAULT_COSTS
+    gather_kernel: bool = False   # paged mode: materialize the far view with
+                                  # the Pallas paged-gather kernel instead of
+                                  # an XLA take (parity pinned by tests)
 
 
 def init_tiered_cache(k_cache: jax.Array, v_cache: jax.Array,
@@ -188,6 +208,23 @@ def _far_stats(q, k, v, live_mask):
             m.reshape(B, H), l.reshape(B, H))
 
 
+def _token_masses(q: jax.Array, k: jax.Array, live: jax.Array) -> jax.Array:
+    """(B, T) per-token attention mass, summed over heads (the caller
+    divides by H after its page-sum).  live: (B, T) bool; dead tokens get
+    exactly zero mass.  Shared by the monolithic and paged scoring passes
+    so both modes stay decision-identical by construction."""
+    B, H, hd = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qh = q.reshape(B, Hkv, g, hd) * hd ** -0.5
+    s = jnp.einsum("bkgd,btkd->bkgt", qh, k).astype(jnp.float32)
+    lv = live[:, None, None, :]
+    s = jnp.where(lv, s, ref.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(lv, p, 0.0)
+    return p.sum(axis=(1, 2))                                # (B,T)
+
+
 def page_masses(q: jax.Array, cache: dict, pos: jax.Array,
                 cfg: TieredKVConfig) -> jax.Array:
     """Scoring pass: per-page attention mass with the current queries —
@@ -196,40 +233,45 @@ def page_masses(q: jax.Array, cache: dict, pos: jax.Array,
     Returns (B, n_pages) f32 normalized masses over the *whole* cache
     (near-resident pages included, so retention scores stay fresh).
     ``pos`` may be a scalar or a ragged (B,) vector."""
-    B, H, hd = q.shape
+    B, H, _ = q.shape
     k = cache["far_k"]
-    T, Hkv = k.shape[1], k.shape[2]
-    g = H // Hkv
-    qh = q.reshape(B, Hkv, g, hd) * hd ** -0.5
-    s = jnp.einsum("bkgd,btkd->bkgt", qh, k).astype(jnp.float32)
-    live = (jnp.arange(T)[None, :] < _pos_vec(pos, B)[:, None]
-            )[:, None, None, :]
-    s = jnp.where(live, s, ref.NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(live, p, 0.0)
-    mass = p.sum(axis=(1, 2))                                # (B,T)
+    T = k.shape[1]
+    live = jnp.arange(T)[None, :] < _pos_vec(pos, B)[:, None]
+    mass = _token_masses(q, k, live)
     n_pages = T // cfg.page
     return mass.reshape(B, n_pages, cfg.page).sum(-1) / max(H, 1)
 
 
-def _copy_pages(near_k, near_v, far_k, far_v, rows, slots, valid, page: int):
-    """IST analogue: copy up to K far pages into near slots (pure on-device
-    dynamic slices; invalid plan entries are dropped)."""
+def _copy_pool_pages(near_k, near_v, pool_k, pool_v, pages, slots, valid,
+                     page: int):
+    """IST analogue: copy up to K pages of a (P, page, ...) page array into
+    (C*page, ...) near buffers (pure on-device dynamic slices; invalid plan
+    entries are dropped).  Serves both tier layouts — the monolithic far
+    buffer reshapes to page-major via ``_copy_pages``."""
 
     def copy_page(i, bufs):
         nk, nv = bufs
-        src = jnp.where(valid[i], rows[i], 0) * page
+        src = jnp.where(valid[i], pages[i], 0)
         dst = jnp.where(valid[i], slots[i], 0) * page
-        page_k = jax.lax.dynamic_slice_in_dim(far_k, src, page, 0)
-        page_v = jax.lax.dynamic_slice_in_dim(far_v, src, page, 0)
+        page_k = jax.lax.dynamic_slice_in_dim(pool_k, src, 1, 0)[0]
+        page_v = jax.lax.dynamic_slice_in_dim(pool_v, src, 1, 0)[0]
         nk_new = jax.lax.dynamic_update_slice_in_dim(nk, page_k, dst, 0)
         nv_new = jax.lax.dynamic_update_slice_in_dim(nv, page_v, dst, 0)
-        keep = valid[i]
-        nk = jnp.where(keep, nk_new, nk)
-        nv = jnp.where(keep, nv_new, nv)
+        nk = jnp.where(valid[i], nk_new, nk)
+        nv = jnp.where(valid[i], nv_new, nv)
         return nk, nv
 
-    return jax.lax.fori_loop(0, rows.shape[0], copy_page, (near_k, near_v))
+    return jax.lax.fori_loop(0, pages.shape[0], copy_page, (near_k, near_v))
+
+
+def _copy_pages(near_k, near_v, far_k, far_v, rows, slots, valid, page: int):
+    """Monolithic-layout wrapper: view the (T, ...) far buffer page-major
+    and defer to the shared page copier."""
+    return _copy_pool_pages(
+        near_k, near_v,
+        far_k.reshape(far_k.shape[0] // page, page, *far_k.shape[1:]),
+        far_v.reshape(far_v.shape[0] // page, page, *far_v.shape[1:]),
+        rows, slots, valid, page)
 
 
 def plan_and_migrate(cache: dict, q: jax.Array, pos: jax.Array,
@@ -336,4 +378,367 @@ def preload_static_kv(cache: dict, profile_masses: jax.Array,
         r4 = r[:, None, None, None]
         cache["near_k"] = jnp.where(r4, new_nk, cache["near_k"])
         cache["near_v"] = jnp.where(r4, new_nv, cache["near_v"])
+    return cache
+
+
+# ===========================================================================
+# Paged far tier: a refcounted shared page pool (docs/design.md §2d)
+#
+# The dense per-slot (B, T, Hkv, hd) far buffer above gives every sequence a
+# private copy of every KV page.  The paged mode below restructures the far
+# tier into one *pool* of pages shared by all slots:
+#
+#   pool_k/pool_v : (P, page, Hkv, hd)  — the master copies
+#   page_table    : (B, n_pages) int32 — pool page id per slot page, -1 if
+#                                        unmapped (per-slot indirection)
+#   PagePool      : host-side refcounted allocator (free list + prefix-cache
+#                                        retention flags)
+#
+# Sequences admitted with a shared prompt prefix map the *same* pool pages
+# (refcount++) instead of re-storing them, and the near tier becomes global:
+# one (C*page,) buffer whose pages are scored by the AGGREGATE attention
+# mass of every referencing sequence and promoted once for all tenants —
+# the paper's one-IST-many-accesses economics made literal.  Page-table
+# dead-entry handling follows the shared-engine sentinel idiom: -1 entries
+# route through clamped gathers and are masked from every read.
+# ===========================================================================
+
+
+class PagePool:
+    """Host-side refcounted allocator over a fixed pool of KV pages.
+
+    ``refcount[p]`` counts the *slots* whose page table references page p —
+    the invariant the paged fuzz suite pins.  ``cached[p]`` marks pages
+    additionally retained by the radix prefix index (``repro.serve.prefix``)
+    after their refcount drops to zero; they stay allocated (re-admissions
+    hit them) until the index evicts them under pool pressure.
+    """
+
+    def __init__(self, n_pages: int):
+        self.n_pages = n_pages
+        self.refcount = np.zeros(n_pages, np.int32)
+        self.cached = np.zeros(n_pages, bool)
+        self._free = deque(range(n_pages))
+
+    def available(self) -> int:
+        return len(self._free)
+
+    def allocate(self, n: int) -> list[int]:
+        """Take n free pages (refcount 1: the mapping slot holds the ref)."""
+        if len(self._free) < n:
+            raise RuntimeError(
+                f"page pool exhausted: want {n}, free {len(self._free)}")
+        out = [self._free.popleft() for _ in range(n)]
+        self.refcount[out] = 1
+        return out
+
+    def acquire(self, pages) -> None:
+        """Another slot references already-allocated pages (prefix hit)."""
+        for p in pages:
+            assert self.refcount[p] > 0 or self.cached[p], \
+                f"acquire of unallocated page {p}"
+            self.refcount[p] += 1
+
+    def release(self, pages) -> list[int]:
+        """Drop one slot reference per page; returns pages actually freed
+        (refcount hit zero and the prefix index does not retain them)."""
+        freed = []
+        for p in pages:
+            if p < 0:
+                continue
+            assert self.refcount[p] > 0, f"release of free page {p}"
+            self.refcount[p] -= 1
+            if self.refcount[p] == 0 and not self.cached[p]:
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
+    def retain(self, pages) -> None:
+        """Prefix-index retention: keep pages allocated at refcount zero."""
+        for p in pages:
+            self.cached[p] = True
+
+    def drop_cached(self, pages) -> list[int]:
+        """Prefix-index eviction; returns pages freed to the pool."""
+        freed = []
+        for p in pages:
+            self.cached[p] = False
+            if self.refcount[p] == 0:
+                self._free.append(p)
+                freed.append(p)
+        return freed
+
+
+def init_paged_cache(cfg: TieredKVConfig, n_slots: int, n_pages: int,
+                     pool_pages: int, n_kv_heads: int, head_dim: int,
+                     dtype=jnp.bfloat16) -> dict:
+    """Device state for the paged far tier + global near tier."""
+    C = cfg.near_pages
+    return {
+        "pool_k": jnp.zeros((pool_pages, cfg.page, n_kv_heads, head_dim),
+                            dtype),
+        "pool_v": jnp.zeros((pool_pages, cfg.page, n_kv_heads, head_dim),
+                            dtype),
+        "page_table": -jnp.ones((n_slots, n_pages), jnp.int32),
+        "near_k": jnp.zeros((C * cfg.page, n_kv_heads, head_dim), dtype),
+        "near_v": jnp.zeros((C * cfg.page, n_kv_heads, head_dim), dtype),
+        "slot_of_page": -jnp.ones((pool_pages,), jnp.int32),
+        "page_of_slot": -jnp.ones((C,), jnp.int32),
+        "scores": jnp.zeros((pool_pages,), jnp.float32),
+        "last_use": jnp.zeros((pool_pages,), jnp.float32),
+        "step": jnp.zeros((), jnp.int32),
+        "migrations": jnp.zeros((), jnp.int32),
+    }
+
+
+def paged_append_token(cache: dict, k_new: jax.Array, v_new: jax.Array,
+                       pos: jax.Array, cfg: TieredKVConfig) -> dict:
+    """Append one token's K/V through the page table into the pool.
+
+    k_new/v_new: (B, 1, Hkv, hd); pos: (B,) per-slot positions.  Writes to
+    unmapped pages — and to positions at/past the cache capacity, whose
+    page index would otherwise clamp onto the LAST page and corrupt it —
+    are dropped (out-of-bounds sentinel)."""
+    cache = dict(cache)
+    pos = _pos_vec(pos, k_new.shape[0])
+    P = cache["pool_k"].shape[0]
+    n_pages = cache["page_table"].shape[1]
+    j = pos // cfg.page
+    pid = jnp.take_along_axis(cache["page_table"], j[:, None], axis=1)[:, 0]
+    safe = jnp.where((pid >= 0) & (j < n_pages), pid, P)
+    off = pos % cfg.page
+    cache["pool_k"] = cache["pool_k"].at[safe, off].set(k_new[:, 0],
+                                                        mode="drop")
+    cache["pool_v"] = cache["pool_v"].at[safe, off].set(v_new[:, 0],
+                                                        mode="drop")
+    return cache
+
+
+def paged_far_view(cache: dict, cfg: TieredKVConfig):
+    """Materialize each slot's far cache from the pool via its page table.
+
+    Returns (far_k, far_v) of shape (B, n_pages*page, Hkv, hd); unmapped
+    pages come out as page 0's content and MUST be masked by the caller
+    (every caller masks on ``page_table >= 0``)."""
+    pt = cache["page_table"]
+    B, n_pages = pt.shape
+    if cfg.gather_kernel:
+        # the kernel gets the RAW table: its -1 => zeros contract is live
+        # (the XLA path below clamps instead — either way, unmapped content
+        # is arbitrary and masked)
+        from repro.kernels.paged_gather import paged_gather
+        interpret = jax.default_backend() == "cpu"
+        far_k = paged_gather(cache["pool_k"], pt, interpret=interpret)
+        far_v = paged_gather(cache["pool_v"], pt, interpret=interpret)
+        return far_k, far_v
+    safe = jnp.maximum(pt, 0)
+    _, page, Hkv, hd = cache["pool_k"].shape
+    far_k = cache["pool_k"][safe].reshape(B, n_pages * page, Hkv, hd)
+    far_v = cache["pool_v"][safe].reshape(B, n_pages * page, Hkv, hd)
+    return far_k, far_v
+
+
+def _paged_masks(cache: dict, pos: jax.Array, cfg: TieredKVConfig):
+    """(far_live, near_live) boolean masks for the paged read path.
+
+    far_live (B, T): token is mapped, before the slot's position, and its
+    page is NOT near-resident.  near_live (B, C*page): the near slot holds a
+    page of this sequence and the token is before the slot's position (the
+    global near tier serves every tenant of a promoted page)."""
+    pt = cache["page_table"]
+    B, n_pages = pt.shape
+    page = cfg.page
+    pos = _pos_vec(pos, B)
+    mapped = pt >= 0
+    promoted = cache["slot_of_page"][jnp.maximum(pt, 0)] >= 0    # (B,n_pages)
+    tok = jnp.arange(n_pages * page)
+    far_live = ((tok[None, :] < pos[:, None])
+                & jnp.repeat(mapped & ~promoted, page, axis=1))
+
+    page_of_slot = cache["page_of_slot"]                          # (C,)
+    occupied = page_of_slot >= 0
+    eq = (pt[:, :, None] == page_of_slot[None, None, :]) \
+        & occupied[None, None, :] & mapped[:, :, None]            # (B,np,C)
+    j_of = jnp.where(eq.any(axis=1), jnp.argmax(eq, axis=1), -1)  # (B,C)
+    near_tok = j_of[:, :, None] * page + jnp.arange(page)[None, None, :]
+    near_live = ((j_of[:, :, None] >= 0)
+                 & (near_tok < pos[:, None, None]))
+    return far_live, near_live.reshape(B, -1)
+
+
+def paged_tiered_attention(cache: dict, q: jax.Array, pos: jax.Array,
+                           cfg: TieredKVConfig) -> jax.Array:
+    """Two-tier decode attention over the paged far pool + global near tier.
+
+    Exactly standard attention over each slot's live prefix: pages resident
+    in the (shared) near buffer are served there for *every* referencing
+    sequence and masked out of the far pass; the LSE merge is exact."""
+    B = q.shape[0]
+    far_k, far_v = paged_far_view(cache, cfg)
+    far_live, near_live = _paged_masks(cache, pos, cfg)
+    nk = jnp.broadcast_to(cache["near_k"][None],
+                          (B,) + cache["near_k"].shape)
+    nv = jnp.broadcast_to(cache["near_v"][None],
+                          (B,) + cache["near_v"].shape)
+    stats_n = _far_stats(q, nk, nv, near_live)
+    stats_f = _far_stats(q, far_k, far_v, far_live)
+    return ref.merge_attention_stats([stats_n, stats_f])
+
+
+def paged_page_masses(q: jax.Array, cache: dict, pos: jax.Array,
+                      cfg: TieredKVConfig) -> jax.Array:
+    """Per-slot per-page attention mass over the paged far pool.
+
+    Returns (B, n_pages) f32 — near-resident pages included (scores stay
+    fresh), unmapped pages zero.  The *aggregate* pool-page mass that drives
+    planning is derived by ``aggregate_pool_masses``."""
+    B, H, _ = q.shape
+    pt = cache["page_table"]
+    n_pages = pt.shape[1]
+    page = cfg.page
+    far_k, _ = paged_far_view(cache, cfg)
+    T = far_k.shape[1]
+    live = ((jnp.arange(T)[None, :] < _pos_vec(pos, B)[:, None])
+            & jnp.repeat(pt >= 0, page, axis=1))
+    mass = _token_masses(q, far_k, live)
+    return mass.reshape(B, n_pages, page).sum(-1) / max(H, 1)
+
+
+def aggregate_pool_masses(cache: dict, masses: jax.Array, pos: jax.Array,
+                          cfg: TieredKVConfig) -> jax.Array:
+    """Scatter per-slot page masses onto pool pages: a shared page is scored
+    by the SUM of every referencing sequence's attention mass on it.  Only
+    completely-written pages contribute (the same promotion guard the
+    monolithic path applies — a partial page must not enter the near tier).
+    """
+    pt = cache["page_table"]
+    B, n_pages = pt.shape
+    P = cache["pool_k"].shape[0]
+    pos_b = _pos_vec(pos, B)
+    complete = (jnp.arange(n_pages)[None, :] + 1) * cfg.page \
+        <= pos_b[:, None]
+    m = jnp.where(complete & (pt >= 0), masses, 0.0)
+    pid = jnp.where(pt >= 0, pt, P)
+    return jnp.zeros((P,), jnp.float32).at[pid.ravel()].add(
+        m.ravel(), mode="drop")
+
+
+def paged_plan_and_migrate(cache: dict, q: jax.Array, pos: jax.Array,
+                           cfg: TieredKVConfig, idle=True,
+                           masses: jax.Array | None = None) -> dict:
+    """One planning interval over the POOL page population (jittable).
+
+    The shared vectorized engine (`repro.tier.jax_engine`) runs once over
+    all P pool pages with the global (C,) near mapping — a hot page shared
+    by many sequences aggregates their attention mass and is promoted once
+    for all of them.  ``masses``: optionally pass a precomputed
+    ``paged_page_masses`` result."""
+    if cfg.policy.upper() == "STATIC":
+        return cache          # per-slot pinning is the engine's host path
+    cache = dict(cache)
+    if masses is None:
+        masses = paged_page_masses(q, cache, pos, cfg)
+    acts = aggregate_pool_masses(cache, masses, pos, cfg) * cfg.interval
+    cache["scores"] = ema_update(cache["scores"], acts, cfg.costs)
+    cache["last_use"] = jnp.where(acts > 0, cache["step"].astype(jnp.float32),
+                                  cache["last_use"])
+    cache["step"] = cache["step"] + 1
+    sc_like = cfg.policy.upper() in ("SC", "WMC")
+    pages, slots, valid = plan_promotions(
+        cache["scores"], cache["slot_of_page"], cache["page_of_slot"],
+        cfg.costs, cfg.max_promotions, policy=cfg.policy,
+        last_use=cache["last_use"],
+        accessed=(acts > 0) if sc_like else None, idle=idle)
+    cache["slot_of_page"], cache["page_of_slot"] = apply_promotions(
+        cache["slot_of_page"], cache["page_of_slot"], pages, slots, valid)
+    cache["near_k"], cache["near_v"] = _copy_pool_pages(
+        cache["near_k"], cache["near_v"], cache["pool_k"], cache["pool_v"],
+        pages, slots, valid, cfg.page)
+    cache["migrations"] = cache["migrations"] + valid.sum().astype(jnp.int32)
+    return cache
+
+
+def paged_pin_pages(cache: dict, pages, slots, cfg: TieredKVConfig) -> dict:
+    """STATIC placement on the pool: map the given pool pages into the given
+    (free) near slots and copy their contents in.  ``pages``/``slots`` are
+    host lists — the engine's per-slot first-interval pinning pass."""
+    if not len(pages):
+        return cache
+    cache = dict(cache)
+    pages_a = jnp.asarray(list(pages), jnp.int32)
+    slots_a = jnp.asarray(list(slots), jnp.int32)
+    valid = jnp.ones((len(pages),), bool)
+    cache["slot_of_page"] = cache["slot_of_page"].at[pages_a].set(slots_a)
+    cache["page_of_slot"] = cache["page_of_slot"].at[slots_a].set(pages_a)
+    cache["near_k"], cache["near_v"] = _copy_pool_pages(
+        cache["near_k"], cache["near_v"], cache["pool_k"], cache["pool_v"],
+        pages_a, slots_a, valid, cfg.page)
+    return cache
+
+
+def paged_release_pages(cache: dict, pages, cfg: TieredKVConfig) -> dict:
+    """Reset tier state for pool pages leaving allocation (freed at retire
+    or evicted from the prefix index): zero their scores, and demote any
+    near-resident ones — compacting the near mapping so occupied near slots
+    remain a prefix (the invariant every read depends on).
+
+    Host-side (numpy mapping surgery + one device reorder of the near
+    buffers); runs at admission/retirement boundaries, never per step."""
+    pages = [int(p) for p in pages]
+    if not pages:
+        return cache
+    cache = dict(cache)
+    P = cache["scores"].shape[0]
+    C = cache["page_of_slot"].shape[0]
+    page = cfg.page
+    scores = np.array(cache["scores"])
+    last_use = np.array(cache["last_use"])
+    sop = np.array(cache["slot_of_page"])
+    ros = np.array(cache["page_of_slot"])
+    scores[pages] = 0.0
+    last_use[pages] = 0.0
+    drop_slots = {int(sop[p]) for p in pages if sop[p] >= 0}
+    if drop_slots:
+        keep = [c for c in range(C) if ros[c] >= 0 and c not in drop_slots]
+        perm = np.arange(C)
+        new_ros = -np.ones(C, np.int32)
+        new_sop = -np.ones(P, np.int32)
+        for i, c in enumerate(keep):
+            perm[i] = c
+            new_ros[i] = ros[c]
+            new_sop[ros[c]] = i
+        shape = cache["near_k"].shape
+        nk = cache["near_k"].reshape(C, page, *shape[1:])
+        nv = cache["near_v"].reshape(C, page, *shape[1:])
+        cache["near_k"] = jnp.take(nk, perm, axis=0).reshape(shape)
+        cache["near_v"] = jnp.take(nv, perm, axis=0).reshape(shape)
+        sop, ros = new_sop, new_ros
+    sop[pages] = -1
+    cache["scores"] = jnp.asarray(scores)
+    cache["last_use"] = jnp.asarray(last_use)
+    cache["slot_of_page"] = jnp.asarray(sop)
+    cache["page_of_slot"] = jnp.asarray(ros)
+    return cache
+
+
+def refresh_pool_from_slots(cache: dict, k_rows: jax.Array,
+                            v_rows: jax.Array,
+                            cfg: TieredKVConfig) -> dict:
+    """Scatter each slot's dense cache rows into its mapped pool pages.
+
+    The serving engine's decode step appends K/V to the dense per-slot
+    cache (the exact read path); before each planning pass this one jittable
+    scatter brings the pool master copies up to date.  Pages mapped by
+    several slots receive identical content (shared prefixes are immutable,
+    decode pages are private), so duplicate scatter writes are benign;
+    unmapped (prefix-index-retained) pages keep their frozen content."""
+    cache = dict(cache)
+    pt = cache["page_table"]
+    B, n_pages = pt.shape
+    P, page, Hkv, hd = cache["pool_k"].shape
+    rows_k = k_rows.reshape(B * n_pages, page, Hkv, hd)
+    rows_v = v_rows.reshape(B * n_pages, page, Hkv, hd)
+    pid = jnp.where(pt >= 0, pt, P).ravel()
+    cache["pool_k"] = cache["pool_k"].at[pid].set(rows_k, mode="drop")
+    cache["pool_v"] = cache["pool_v"].at[pid].set(rows_v, mode="drop")
     return cache

@@ -1,0 +1,52 @@
+"""Pallas kernel: page-granular KV gather from the shared far pool.
+
+The paged far tier (docs/design.md §2d) keeps one refcounted pool of KV
+pages; each slot's far view is its page table resolved against the pool.
+XLA lowers that resolution to a row gather — fine, but grain-agnostic.  This
+kernel exploits the page structure: the unit of transfer is a whole
+(page, Hkv*hd) panel, so each grid step issues ONE dynamic VMEM load per
+page instead of per-row gathers — the TL-DRAM observation that the far
+segment's cost is per-activation, not per-bit, applied to the gather path.
+
+Grid: (B, n_pages).  VMEM per step: the full pool (production note: block
+the pool once P*page*D exceeds VMEM) plus one output page panel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _paged_gather_kernel(ids_ref, pool_ref, o_ref):
+    pid = ids_ref[0, 0]
+    panel = pool_ref[pl.ds(jnp.maximum(pid, 0), 1), :, :]        # (1,page,D)
+    o_ref[0, :, :] = jnp.where(pid >= 0, panel[0], 0.0).astype(o_ref.dtype)
+
+
+def paged_gather(pool: jax.Array, page_ids: jax.Array,
+                 interpret: bool = False) -> jax.Array:
+    """pool: (P, page, Hkv, hd); page_ids: (B, n_pages) int32 (< 0 => zeros).
+
+    Returns (B, n_pages*page, Hkv, hd): each row b is the contiguous
+    materialization of b's page table against the pool."""
+    P, page, Hkv, hd = pool.shape
+    B, n_pages = page_ids.shape
+    D = Hkv * hd
+    pool2 = pool.reshape(P, page, D)
+
+    out = pl.pallas_call(
+        functools.partial(_paged_gather_kernel),
+        grid=(B, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, j: (b, j)),
+            pl.BlockSpec((P, page, D), lambda b, j: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, page, D), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, n_pages * page, D), pool.dtype),
+        interpret=interpret,
+    )(page_ids, pool2)
+    return out.reshape(B, n_pages * page, Hkv, hd)

@@ -92,6 +92,19 @@ def tiered_gather_ref(near_table: jax.Array, near_slots: jax.Array,
     return jnp.where((near_slots >= 0)[:, None], gathered, far_values)
 
 
+def paged_gather_ref(pool: jax.Array, page_ids: jax.Array) -> jax.Array:
+    """out[b, j*page:(j+1)*page] = pool[page_ids[b, j]], zeros where id < 0.
+
+    pool: (P, page, Hkv, hd); page_ids: (B, n_pages) int32.
+    """
+    B, n_pages = page_ids.shape
+    _, page, Hkv, hd = pool.shape
+    gathered = jnp.take(pool, jnp.maximum(page_ids, 0), axis=0)
+    gathered = jnp.where((page_ids >= 0)[:, :, None, None, None], gathered,
+                         jnp.zeros((), pool.dtype))
+    return gathered.reshape(B, n_pages * page, Hkv, hd)
+
+
 def ssd_chunk_scan_ref(states: jax.Array, decays: jax.Array,
                        h0: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Inter-chunk SSD state recurrence.

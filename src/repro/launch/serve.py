@@ -21,6 +21,19 @@ def make_prefill_step(arch: ArchConfig, max_len: int):
     return prefill_step
 
 
+def make_suffix_prefill_step(arch: ArchConfig, max_len: int):
+    """Prefix-chunked prefill step for the prefix-sharing admission path:
+    ``batch`` carries only the prompt *suffix* (with absolute positions);
+    ``k_pre``/``v_pre`` are the shared prefix's K/V pages gathered from the
+    far pool ((L, B, T_pre, Hkv, hd)).  Returns suffix logits and a cache
+    whose rows are bit-identical to a full prefill of prefix+suffix — the
+    property the serving engine's token-parity acceptance rests on."""
+    def prefill_step(params, batch, k_pre, v_pre):
+        return transformer.prefill(params, batch, arch, max_len=max_len,
+                                   prefix_kv=(k_pre, v_pre))
+    return prefill_step
+
+
 def make_decode_step(arch: ArchConfig):
     def decode_step(params, cache, batch):
         return transformer.decode_step(params, cache, batch, arch)

@@ -116,8 +116,13 @@ def init_params(key: jax.Array, arch: ArchConfig,
 # ---------------------------------------------------------------------------
 
 def _attn_apply(p, x, positions, arch: ArchConfig, kv_override=None,
-                decode_cache=None, pos_scalar=None):
-    """Full attention path.  Returns (out, (k, v)) for cache construction."""
+                decode_cache=None, pos_scalar=None, kv_prefix=None):
+    """Full attention path.  Returns (out, (k, v)) for cache construction.
+
+    kv_prefix: optional (k_pre, v_pre, pre_positions) — already-computed
+    (RoPE-rotated) K/V of a shared prompt prefix; queries attend the prefix
+    plus themselves (chunked prefill for the prefix-sharing admission path).
+    """
     q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
     k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
     v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
@@ -136,6 +141,13 @@ def _attn_apply(p, x, positions, arch: ArchConfig, kv_override=None,
         k_cache, v_cache = decode_cache
         out = decode_attention(q, k_cache, v_cache, pos_scalar,
                                window=arch.sliding_window)
+    elif kv_prefix is not None:
+        k_pre, v_pre, pre_pos = kv_prefix
+        k_all = jnp.concatenate([k_pre.astype(k.dtype), k], axis=1)
+        v_all = jnp.concatenate([v_pre.astype(v.dtype), v], axis=1)
+        kv_pos = jnp.concatenate([pre_pos, pos_1d], axis=1)
+        out = flash_attention(q, k_all, v_all, pos_1d, kv_pos, causal=True,
+                              window=arch.sliding_window)
     else:
         out = flash_attention(q, k, v, pos_1d, pos_1d, causal=True,
                               window=arch.sliding_window)
@@ -143,7 +155,7 @@ def _attn_apply(p, x, positions, arch: ArchConfig, kv_override=None,
     return out, (k, v)
 
 
-def _block_train(p, x, positions, arch: ArchConfig):
+def _block_train(p, x, positions, arch: ArchConfig, kv_prefix=None):
     """One layer, training/prefill mode.  Returns (x, aux, (k, v), ssm_state,
     conv_tail) — cache parts are None where inapplicable."""
     aux = jnp.float32(0.0)
@@ -154,7 +166,8 @@ def _block_train(p, x, positions, arch: ArchConfig):
         return x + h, aux, kv, ssm_state, conv_tail
 
     normed = rms_norm(x, p["attn_norm"])
-    attn_out, kv = _attn_apply(p["attn"], normed, positions, arch)
+    attn_out, kv = _attn_apply(p["attn"], normed, positions, arch,
+                               kv_prefix=kv_prefix)
     if arch.family == "hybrid":
         ssm_out, ssm_state, conv_tail = ssm_lib.ssd_chunked(
             p["ssm"], normed, arch.ssm)
@@ -351,8 +364,17 @@ def init_cache(arch: ArchConfig, batch: int, max_len: int,
 
 
 def prefill(params: Params, batch: dict, arch: ArchConfig, max_len: int,
-            compute_dtype=jnp.bfloat16):
-    """Process a prompt, returning (logits, cache ready for decode)."""
+            compute_dtype=jnp.bfloat16, prefix_kv=None):
+    """Process a prompt, returning (logits, cache ready for decode).
+
+    prefix_kv: optional (k_pre, v_pre) of shape (L, B, T_pre, Hkv, hd) —
+    already-computed K/V of a shared prompt prefix (the paged far pool's
+    copy).  Only the *suffix* in ``batch`` is computed; its queries attend
+    prefix + suffix, and the returned cache holds prefix followed by suffix
+    rows — exactly the cache a full prefill of prefix+suffix would produce,
+    at suffix cost.  ``batch["positions"]`` must then carry the suffix's
+    absolute positions (T_pre + arange(S)); logits cover the suffix only.
+    """
     x = _embed_inputs(params, batch, arch).astype(compute_dtype)
     x = ctx.constrain(x, ctx.BATCH, ctx.SEQ, None)
     B, S = x.shape[:2]
@@ -363,36 +385,56 @@ def prefill(params: Params, batch: dict, arch: ArchConfig, max_len: int,
         lambda a: a.astype(compute_dtype)
         if a.dtype == jnp.float32 and a.ndim > 1 else a, params["layers"])
 
-    def body(h, layer_params):
+    t_pre = 0
+    if prefix_kv is not None:
+        assert arch.n_heads and arch.ssm is None and not arch.sliding_window, \
+            "prefix-chunked prefill needs a plain-attention architecture"
+        k_pre, v_pre = prefix_kv
+        t_pre = k_pre.shape[2]
+        pre_pos = jnp.broadcast_to(jnp.arange(t_pre, dtype=jnp.int32),
+                                   (B, t_pre))
+        xs = (cparams, k_pre.astype(compute_dtype),
+              v_pre.astype(compute_dtype))
+    else:
+        xs = (cparams, None, None)
+
+    def body(h, scanned):
+        layer_params, k_pre_l, v_pre_l = scanned
+        kv_prefix = None if k_pre_l is None \
+            else (k_pre_l, v_pre_l, pre_pos)
         h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
         h, _, kv, ssm_state, conv_tail = _block_train(
-            layer_params, h, positions, arch)
+            layer_params, h, positions, arch, kv_prefix=kv_prefix)
         h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
         outs = {}
         if kv is not None:
             k, v = kv
+            if k_pre_l is not None:
+                k = jnp.concatenate([k_pre_l.astype(k.dtype), k], axis=1)
+                v = jnp.concatenate([v_pre_l.astype(v.dtype), v], axis=1)
+            written = k.shape[1]
             T = cache["k"].shape[2]
-            if arch.sliding_window and S > T:
+            if arch.sliding_window and written > T:
                 # Keep the last `window` tokens, rotated into ring order.
                 k, v = k[:, -T:], v[:, -T:]
-                shift = S % T
+                shift = written % T
                 k = jnp.roll(k, shift, axis=1)
                 v = jnp.roll(v, shift, axis=1)
-            elif S < T:
-                k = jnp.pad(k, ((0, 0), (0, T - S), (0, 0), (0, 0)))
-                v = jnp.pad(v, ((0, 0), (0, T - S), (0, 0), (0, 0)))
+            elif written < T:
+                k = jnp.pad(k, ((0, 0), (0, T - written), (0, 0), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, T - written), (0, 0), (0, 0)))
             outs["k"], outs["v"] = k, v
         if ssm_state is not None:
             outs["ssm"] = ssm_state
             outs["conv"] = conv_tail
         return h, outs
 
-    x, stacked = jax.lax.scan(body, x, cparams)
+    x, stacked = jax.lax.scan(body, x, xs)
     x = rms_norm(x, params["final_norm"].astype(compute_dtype))
     logits = _lm_logits(params, x, arch)
     logits = ctx.constrain(logits, ctx.BATCH,
                            *([None] * (logits.ndim - 2)), ctx.MODEL)
-    cache = {**cache, **stacked, "pos": jnp.asarray(S, jnp.int32)}
+    cache = {**cache, **stacked, "pos": jnp.asarray(t_pre + S, jnp.int32)}
     return logits, cache
 
 

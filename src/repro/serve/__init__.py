@@ -1,12 +1,14 @@
-"""Continuous-batching tiered-KV serving runtime (docs/design.md §2c)."""
+"""Continuous-batching tiered-KV serving runtime (docs/design.md §2c–2d)."""
 
 from repro.serve.engine import (ServingConfig, ServingEngine,
                                 sequential_baseline)
 from repro.serve.metrics import CostModel, ServingReport, percentiles
+from repro.serve.prefix import PrefixStats, RadixPrefixCache
 from repro.serve.trace import SCENARIOS, Request
 
 __all__ = [
     "ServingConfig", "ServingEngine", "sequential_baseline",
     "CostModel", "ServingReport", "percentiles",
+    "PrefixStats", "RadixPrefixCache",
     "SCENARIOS", "Request",
 ]

@@ -4,28 +4,45 @@ The paper's near segment only pays off when many concurrent accesses share
 the fast path; the serving analogue is a *slot pool*: a fixed batch of
 decode slots that independent sequences are admitted into and retired from,
 so one batched decode step serves every in-flight sequence at once (ragged
-``pos`` — each slot sits at its own position), while the unified
-`repro.tier` engine migrates each slot's hot KV pages into the near tier on
-a background cadence.
+``pos`` — each slot sits at its own position).
+
+Since PR 3 the far tier behind the slots is a **refcounted shared page
+pool** (``core.tiered_kv`` paged mode, docs/design.md §2d): each slot's far
+view is a page table into the pool, and a radix prefix cache
+(``serve.prefix``) lets admissions reuse already-written pages for shared
+prompt prefixes — refcount++, prefill **only the suffix** (the modeled
+clock and the real compute both drop), and the suffix-chunked
+``transformer.prefill`` reproduces the full-prefill cache rows
+bit-identically.  The near tier is global: a hot shared page is scored by
+the aggregate attention mass of every referencing sequence and promoted
+ONCE for all tenants — the paper's one-IST-many-accesses economics.
 
 Scheduler loop (``ServingEngine.run``):
 
-  admit    : pop arrived requests into free slots — prefill (bucketed jit)
-             into the slot's rows of the pool cache, seed the first token.
+  admit    : pop arrived requests into free slots — match the prompt
+             against the radix prefix cache, map shared pages, prefill the
+             suffix (bucketed jit) into the slot's rows, seed the first
+             token, cache the prompt's new full pages in the pool.
   decode   : ONE batched ``transformer.decode_step`` with per-slot ``pos``
              (ragged state threaded through RoPE, cache scatter and the
              attention mask) emits a token for every active slot.
-  maintain : every ``tier.interval`` steps, score per-page attention mass
-             with the step's layer-0 queries and run the configured policy
-             (SC/WMC/BBC via ``plan_and_migrate``; STATIC pins each slot
-             once at its first interval) — the amortized IST.
-  retire   : finished sequences free their slot (tier state reset so the
-             next tenant inherits nothing); the slot is reused.
+  maintain : every ``tier.interval`` steps, refresh the pool master copies
+             from the slot rows, score per-page attention mass with the
+             step's layer-0 queries, aggregate it onto pool pages, and run
+             the configured policy (SC/WMC/BBC via
+             ``paged_plan_and_migrate``; STATIC pins each slot once at its
+             first interval) — the amortized IST.
+  retire   : finished sequences release their page refs; pages at refcount
+             zero are freed unless the prefix cache retains them for
+             re-arrivals (multi-turn chat keeps hitting, and a page's near
+             residency survives its tenants).
 
 The decode path is *exact* (full-cache attention with ragged masks), so
 emitted tokens match the single-sequence ``greedy_generate`` reference
-bit-for-bit; the tiered state drives the byte-cost model and, optionally, a
-read-path verification probe (``verify_tiered_read``).
+bit-for-bit with sharing on or off (pinned in
+tests/test_prefix_sharing.py); the paged tiered state drives the byte-cost
+model and, optionally, a read-path verification probe
+(``verify_tiered_read``).
 """
 
 from __future__ import annotations
@@ -40,10 +57,11 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import tiered_kv as tkv
-from repro.core.tiered_kv import TieredKVConfig
+from repro.core.tiered_kv import PagePool, TieredKVConfig
 from repro.kernels import ref
 from repro.models import transformer
 from repro.serve.metrics import CostModel, ServingReport
+from repro.serve.prefix import RadixPrefixCache
 from repro.serve.trace import Request
 
 
@@ -56,8 +74,15 @@ class ServingConfig:
                                   # causal attention ignores the pad tail)
     tier: TieredKVConfig = field(default_factory=TieredKVConfig)
     cost: CostModel = field(default_factory=CostModel)
-    verify_tiered_read: bool = False   # probe tiered read vs monolithic
-                                       # attention at every planning pass
+    share_prefix: bool = False    # radix prefix cache over the page pool:
+                                  # admissions reuse shared prompt pages and
+                                  # prefill only the suffix
+    pool_pages: int | None = None  # far-pool capacity; default covers every
+                                   # slot fully plus retention slack for the
+                                   # prefix cache
+    verify_tiered_read: bool = False   # probe paged tiered read vs
+                                       # monolithic attention at every
+                                       # planning pass
 
 
 @dataclass
@@ -75,43 +100,139 @@ class ServingEngine:
             "ragged slot pool + ring buffer not supported yet"
         assert cfg.max_len % cfg.tier.page == 0, \
             "max_len must be a page multiple"
+        assert not (cfg.share_prefix and arch.mrope), \
+            "prefix sharing needs 1-D positions"
         self.params, self.arch, self.cfg = params, arch, cfg
+        self.n_pages = cfg.max_len // cfg.tier.page
+        # Pool sizing: worst case (no sharing) every slot maps private
+        # pages; the slack keeps retired prompts cached for re-arrivals.
+        self.pool_pages = cfg.pool_pages if cfg.pool_pages is not None \
+            else (cfg.n_slots + 4) * self.n_pages
+        assert self.pool_pages >= cfg.n_slots * self.n_pages, \
+            "pool must at least cover the slot pool"
         self._decode = jax.jit(
             lambda p, c, b: transformer.decode_step(p, c, b, arch,
                                                     want_aux=True))
         self._plan = jax.jit(
-            lambda c, q, pos, idle, m: tkv.plan_and_migrate(
+            lambda c, q, pos, idle, m: tkv.paged_plan_and_migrate(
                 c, q, pos, cfg.tier, idle=idle, masses=m))
         self._masses = jax.jit(
-            lambda q, c, pos: tkv.page_masses(q, c, pos, cfg.tier))
+            lambda q, c, pos: tkv.paged_page_masses(q, c, pos, cfg.tier))
+        self._refresh = jax.jit(
+            lambda c, k0, v0: tkv.refresh_pool_from_slots(c, k0, v0,
+                                                          cfg.tier))
+        self._read = jax.jit(
+            lambda c, q, pos: tkv.paged_tiered_attention(c, q, pos,
+                                                         cfg.tier))
         # jax.jit caches per input shape, so one wrapper covers every
-        # prompt-length bucket
+        # prompt-length bucket (and every matched-prefix length)
+        from repro.launch.serve import make_suffix_prefill_step
         self._prefill = jax.jit(
             lambda p, b: transformer.prefill(p, b, arch,
                                              max_len=cfg.max_len))
+        self._prefill_sfx = jax.jit(make_suffix_prefill_step(arch,
+                                                             cfg.max_len))
+        page = cfg.tier.page
+
+        def gather_prefix(pool_k, pool_v, ids):
+            """(L,P,page,Hkv,hd) pools + (m,) ids -> (L,1,m*page,Hkv,hd)."""
+            k = pool_k[:, ids]
+            L, m, _, Hkv, hd = k.shape
+            return (k.reshape(L, 1, m * page, Hkv, hd),
+                    pool_v[:, ids].reshape(L, 1, m * page, Hkv, hd))
+
+        def write_pages(pool_k, pool_v, k_rows, v_rows, ids):
+            """Scatter slot rows (L,T,Hkv,hd) into full-layer pool pages;
+            ids: (n_pages,) pool id per prompt page, -1 entries dropped."""
+            L, T, Hkv, hd = k_rows.shape
+            n = ids.shape[0]
+            P = pool_k.shape[1]
+            safe = jnp.where(ids >= 0, ids, P)
+            rk = k_rows.reshape(L, n, page, Hkv, hd)
+            rv = v_rows.reshape(L, n, page, Hkv, hd)
+            return (pool_k.at[:, safe].set(rk, mode="drop"),
+                    pool_v.at[:, safe].set(rv, mode="drop"))
+
+        self._gather_prefix = jax.jit(gather_prefix)
+        self._write_pages = jax.jit(write_pages)
+
+    # -- admission ----------------------------------------------------------
 
     def _admit(self, req: Request, slot: int, clock: float) -> float:
         cfg = self.cfg
-        S = int(req.prompt.shape[0])
+        page = cfg.tier.page
+        prompt = np.asarray(req.prompt, np.int32)
+        S = int(prompt.shape[0])
         assert S + req.max_new_tokens <= cfg.max_len, \
             f"request {req.rid} does not fit max_len={cfg.max_len}"
-        s_pad = -(-S // cfg.prefill_bucket) * cfg.prefill_bucket
+
+        # 1. prefix match: reuse already-written pool pages (refcount++)
+        matched_ids = [] if self.prefix is None \
+            else self.prefix.match(prompt)
+        m = len(matched_ids)
+        matched = m * page
+        if m:
+            self.pool.acquire(matched_ids)
+        # 2. map the rest of the slot's range onto fresh pages (evicting
+        #    LRU cached-idle pages under pressure; their tier state resets)
+        if self.prefix is not None:
+            fresh, evicted = self.prefix.allocate(self.n_pages - m)
+            if evicted:
+                self.paged = tkv.paged_release_pages(self.paged, evicted,
+                                                     cfg.tier)
+        else:
+            fresh = self.pool.allocate(self.n_pages - m)
+        row = matched_ids + fresh
+        self.pt_host[slot] = row
+        self.paged["page_table"] = self.paged["page_table"].at[slot].set(
+            jnp.asarray(row, jnp.int32))
+
+        # 3. prefill ONLY the suffix (bucket-padded); shared-prefix K/V rows
+        #    come from the full-layer pool — real compute drops with matched
+        s_len = S - matched
+        s_pad = -(-s_len // cfg.prefill_bucket) * cfg.prefill_bucket
         padded = np.zeros((1, s_pad), np.int32)
-        padded[0, :S] = req.prompt
-        logits, pcache = self._prefill(self.params, {"tokens": padded})
-        first = int(jnp.argmax(logits[0, S - 1]))
-        # write the sequence's K/V rows into the pool (positions >= S are
-        # zero-padded by prefill and masked by the ragged live mask)
+        padded[0, :s_len] = prompt[matched:]
+        if m:
+            kpre, vpre = self._gather_prefix(
+                self.pool_layers_k, self.pool_layers_v,
+                jnp.asarray(matched_ids, jnp.int32))
+            positions = matched + np.arange(s_pad, dtype=np.int32)[None]
+            logits, pcache = self._prefill_sfx(
+                self.params, {"tokens": padded, "positions": positions},
+                kpre, vpre)
+        else:
+            logits, pcache = self._prefill(self.params, {"tokens": padded})
+        first = int(jnp.argmax(logits[0, s_len - 1]))
+        # write the sequence's K/V rows into the slot pool (positions >= S
+        # are zero-padded by prefill and masked by the ragged live mask)
         self.cache["k"] = self.cache["k"].at[:, slot].set(pcache["k"][:, 0])
         self.cache["v"] = self.cache["v"].at[:, slot].set(pcache["v"][:, 0])
+
+        # 4. cache the prompt's new full pages for future sharers
+        if self.prefix is not None:
+            n_full = S // page
+            if n_full > m:
+                ids = -np.ones(self.n_pages, np.int32)
+                ids[m:n_full] = row[m:n_full]
+                self.pool_layers_k, self.pool_layers_v = self._write_pages(
+                    self.pool_layers_k, self.pool_layers_v,
+                    pcache["k"][:, 0], pcache["v"][:, 0],
+                    jnp.asarray(ids))
+                self.prefix.insert(prompt[:n_full * page], row[:n_full])
+
         self.pos[slot] = S
         self.tok[slot] = first
         self._static_pinned[slot] = False
-        clock += cfg.cost.prefill_cost(S)
+        clock += cfg.cost.prefill_cost(s_len)
         self.slots[slot] = _Slot(req=req, emitted=[first], last_emit=clock)
-        self.report.token_latencies.append(
-            clock - self._visible_clock[req.rid])
+        ttft = clock - self._visible_clock[req.rid]
+        self.report.token_latencies.append(ttft)
+        self.report.ttfts.append(ttft)
         self.report.tokens += 1
+        self.report.prefill_tokens += s_len
+        self.report.prefill_tokens_full += S
+        self.report.prefix_hit_tokens += matched
         self.slot_history.setdefault(slot, []).append(req.rid)
         return clock
 
@@ -122,59 +243,92 @@ class ServingEngine:
         self.pos[slot] = 0
         self.tok[slot] = 0
         self._near_tokens[slot] = 0
-        # clear tier state NOW, not at the next admit: the dead tenant's
-        # decayed scores would otherwise stay promotion-eligible and keep
-        # the planning pass migrating (and billing) its stale pages
-        self.tiered = tkv.reset_sequences(
-            self.tiered, jnp.arange(self.cfg.n_slots) == slot)
+        # drop this slot's page references NOW, not at the next admit: freed
+        # pages' decayed scores would otherwise stay promotion-eligible and
+        # keep the planning pass migrating (and billing) stale pages.
+        # Prefix-cached pages survive at refcount zero (re-arrival hits) —
+        # including their near-tier residency.
+        pids = [int(p) for p in self.pt_host[slot] if p >= 0]
+        freed = self.pool.release(pids)
+        if freed:
+            self.paged = tkv.paged_release_pages(self.paged, freed,
+                                                 self.cfg.tier)
+        self.pt_host[slot] = -1
+        self.paged["page_table"] = self.paged["page_table"].at[slot].set(-1)
         self.free.append(slot)
         self.free.sort()
 
     # -- background tier maintenance ----------------------------------------
 
+    def _pin_static(self, masses: np.ndarray, need: np.ndarray,
+                    clock: float) -> float:
+        """STATIC: at a slot's first planning interval, place its hottest
+        complete pages into FREE global near slots (profile placement — no
+        later migration, no eviction of earlier pins)."""
+        cfg = self.cfg
+        tier = cfg.tier
+        ros = np.asarray(self.paged["page_of_slot"])
+        sop = np.asarray(self.paged["slot_of_page"])
+        free_slots = [c for c in range(ros.shape[0]) if ros[c] < 0]
+        complete = ((np.arange(self.n_pages)[None, :] + 1) * tier.page
+                    <= self.pos[:, None])
+        cand_mass: dict[int, float] = {}
+        for b in np.flatnonzero(need):
+            for j in range(self.n_pages):
+                p = int(self.pt_host[b, j])
+                if p >= 0 and complete[b, j] and masses[b, j] > 0 \
+                        and sop[p] < 0:
+                    cand_mass[p] = cand_mass.get(p, 0.0) + float(masses[b, j])
+        ranked = sorted(cand_mass, key=lambda p: -cand_mass[p])
+        chosen = ranked[:len(free_slots)]
+        if chosen:
+            self.paged = tkv.paged_pin_pages(self.paged, chosen,
+                                             free_slots[:len(chosen)], tier)
+            clock += cfg.cost.migration_cost(len(chosen), tier.page)
+            self.report.migrations += len(chosen)  # pin copies are ISTs too
+        self._static_pinned |= need
+        return clock
+
     def _maintain(self, q0, clock: float, idle: bool) -> float:
         cfg = self.cfg
         tier = cfg.tier
         active = np.array([s is not None for s in self.slots])
-        self.tiered["far_k"] = self.cache["k"][0]
-        self.tiered["far_v"] = self.cache["v"][0]
         pos_vec = jnp.asarray(self.pos, jnp.int32)
-        # one scoring pass per interval: page_masses reads only the far
-        # master copy (migration never changes it), so the same masses
-        # drive planning/pinning AND the hit-mass metric below
-        masses_dev = self._masses(q0, self.tiered, pos_vec)
+        # bring the pool master copies up to date with the decode appends
+        # (one scatter; shared pages receive identical bytes from any tenant)
+        self.paged = self._refresh(self.paged, self.cache["k"][0],
+                                   self.cache["v"][0])
+        # one scoring pass per interval: the same per-slot masses drive
+        # planning/pinning AND the hit-mass metric below
+        masses_dev = self._masses(q0, self.paged, pos_vec)
         if tier.policy.upper() == "STATIC":
-            need = jnp.asarray(active & ~self._static_pinned)
-            if bool(need.any()):
-                self.tiered = tkv.preload_static_kv(
-                    self.tiered, masses_dev, pos_vec, tier, row_mask=need)
-                moved = int(np.asarray(
-                    self.tiered["page_of_slot"] >= 0)[np.asarray(need)].sum())
-                clock += cfg.cost.migration_cost(moved, tier.page)
-                self.report.migrations += moved   # pin copies are ISTs too
-                self._static_pinned |= np.asarray(need)
+            need = active & ~self._static_pinned
+            if need.any():
+                clock = self._pin_static(np.asarray(masses_dev), need, clock)
         else:
-            before = int(self.tiered["migrations"])
-            self.tiered = self._plan(self.tiered, q0, pos_vec, idle,
-                                     masses_dev)
-            moved = int(self.tiered["migrations"]) - before
+            before = int(self.paged["migrations"])
+            self.paged = self._plan(self.paged, q0, pos_vec, idle,
+                                    masses_dev)
+            moved = int(self.paged["migrations"]) - before
             clock += cfg.cost.migration_cost(moved, tier.page)
             self.report.migrations += moved
-        occupied = np.asarray(self.tiered["page_of_slot"] >= 0)
-        self._near_tokens = occupied.sum(axis=1) * tier.page
-        # near-tier hit mass over active slots (the paper's near-segment
-        # hit rate, in attention-mass units)
+        sop = np.asarray(self.paged["slot_of_page"])
+        promoted = (self.pt_host >= 0) & (sop[np.maximum(self.pt_host, 0)]
+                                          >= 0)              # (B, n_pages)
+        self._near_tokens = promoted.sum(axis=1) * tier.page
+        # near-tier hit mass over active slots (the paper's near-segment hit
+        # rate, in attention-mass units) — a shared promoted page counts for
+        # every referencing slot: one IST, many accesses
         if active.any():
             masses = np.asarray(masses_dev)
-            promoted = np.asarray(self.tiered["slot_of_page"] >= 0)
             tot = masses[active].sum()
             if tot > 0:
                 self.report.near_hit_mass.append(
                     float((masses * promoted)[active].sum() / tot))
             if cfg.verify_tiered_read:
-                got = tkv.tiered_attention(self.tiered, q0, pos_vec, tier)
+                got = self._read(self.paged, q0, pos_vec)
                 want = ref.decode_attention_ref(
-                    q0[:, None], self.tiered["far_k"], self.tiered["far_v"],
+                    q0[:, None], self.cache["k"][0], self.cache["v"][0],
                     pos_vec)[:, 0]
                 err = float(jnp.max(jnp.abs(
                     (got - want)[jnp.asarray(active)])))
@@ -186,13 +340,30 @@ class ServingEngine:
     def run(self, trace: list[Request], scenario: str = "trace") -> ServingReport:
         """Replay an offline arrival trace to completion."""
         cfg = self.cfg
+        arch = self.arch
         self.report = ServingReport(scenario=scenario,
                                     policy=cfg.tier.policy,
                                     n_requests=len(trace))
-        self.cache = transformer.init_cache(self.arch, cfg.n_slots,
-                                            cfg.max_len)
-        self.tiered = tkv.init_tiered_cache(self.cache["k"][0],
-                                            self.cache["v"][0], cfg.tier)
+        self.cache = transformer.init_cache(arch, cfg.n_slots, cfg.max_len)
+        self.paged = tkv.init_paged_cache(
+            cfg.tier, cfg.n_slots, self.n_pages, self.pool_pages,
+            arch.n_kv_heads, arch.resolved_head_dim,
+            dtype=self.cache["k"].dtype)
+        self.pool = PagePool(self.pool_pages)
+        self.prefix = RadixPrefixCache(self.pool, cfg.tier.page) \
+            if cfg.share_prefix else None
+        if cfg.share_prefix:
+            # Full-layer K/V store for prefix reuse, indexed by pool page id.
+            # Only trie-cached prompt pages are ever written/read, so sizing
+            # it to the whole pool trades memory for a flat index; a
+            # production deployment would key a smaller store by cached
+            # page (the trie already owns that lifecycle).
+            hd = arch.resolved_head_dim
+            shape = (arch.n_layers, self.pool_pages, cfg.tier.page,
+                     arch.n_kv_heads, hd)
+            self.pool_layers_k = jnp.zeros(shape, self.cache["k"].dtype)
+            self.pool_layers_v = jnp.zeros(shape, self.cache["v"].dtype)
+        self.pt_host = -np.ones((cfg.n_slots, self.n_pages), np.int64)
         self.pos = np.zeros(cfg.n_slots, np.int64)
         self.tok = np.zeros(cfg.n_slots, np.int64)
         self.slots: list[_Slot | None] = [None] * cfg.n_slots
@@ -254,6 +425,9 @@ class ServingEngine:
         self.report.wall_s = time.perf_counter() - t0
         self.report.modeled_time = clock
         self.report.slot_history = dict(self.slot_history)
+        if self.prefix is not None:
+            self.report.prefix_lookups = self.prefix.stats.lookups
+            self.report.prefix_hits = self.prefix.stats.hits
         return self.report
 
 
@@ -283,6 +457,9 @@ def sequential_baseline(params, arch: ArchConfig, trace: list[Request],
         last = clock
         report.tokens += 1
         report.token_latencies.append(0.0)   # no queueing modeled: TTFT = 0
+        report.ttfts.append(0.0)
+        report.prefill_tokens += S
+        report.prefill_tokens_full += S
         for i in range(1, req.max_new_tokens):
             clock += cfg.cost.decode_step_cost(np.zeros(1),
                                                np.asarray([S + i]))

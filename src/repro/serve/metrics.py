@@ -70,11 +70,19 @@ class ServingReport:
     wall_s: float = 0.0
     modeled_time: float = 0.0        # byte-cost clock at completion
     token_latencies: list = field(default_factory=list)   # modeled units
+    ttfts: list = field(default_factory=list)   # first-token latencies
+                                                # (queueing + prefill)
     near_hit_mass: list = field(default_factory=list)     # per planning pass
     migrations: int = 0
     outputs: dict = field(default_factory=dict)           # rid -> [tokens]
     slot_history: dict = field(default_factory=dict)      # slot -> [rids]
     max_read_err: float = 0.0        # tiered read-path verification residual
+    # prefix-sharing accounting (zero when sharing is off)
+    prefill_tokens: int = 0          # tokens actually prefilled (suffixes)
+    prefill_tokens_full: int = 0     # tokens a no-sharing engine prefills
+    prefix_hit_tokens: int = 0       # prompt tokens served from cached pages
+    prefix_lookups: int = 0
+    prefix_hits: int = 0
 
     @property
     def tokens_per_s_wall(self) -> float:
@@ -90,14 +98,31 @@ class ServingReport:
         return float(np.mean(self.near_hit_mass)) if self.near_hit_mass \
             else 0.0
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of prompt tokens whose KV came from the prefix cache."""
+        return self.prefix_hit_tokens / max(self.prefill_tokens_full, 1)
+
+    @property
+    def prefill_saved_frac(self) -> float:
+        """Fraction of prefill tokens the sharing path avoided computing."""
+        return 1.0 - self.prefill_tokens / max(self.prefill_tokens_full, 1)
+
+    @property
+    def p50_ttft(self) -> float:
+        return percentiles(self.ttfts, qs=(50,))[0]
+
     def summary_row(self) -> tuple:
         p50, p99 = percentiles(self.token_latencies)
         return (self.scenario, self.policy, self.tokens,
                 round(self.tokens_per_s_wall, 1),
                 round(self.tokens_per_cost * 1e3, 3),
                 round(self.mean_hit_mass, 3), self.migrations,
-                round(p50, 1), round(p99, 1))
+                round(p50, 1), round(p99, 1),
+                round(self.prefix_hit_rate, 3), self.prefill_tokens,
+                round(self.p50_ttft, 1))
 
     HEADER = ("scenario", "policy", "tokens", "tok/s_wall",
               "tok/kcost_modeled", "near_hit_mass", "migrations",
-              "p50_lat", "p99_lat")
+              "p50_lat", "p99_lat", "prefix_hit_rate", "prefill_toks",
+              "p50_ttft")

@@ -1,0 +1,159 @@
+"""Radix prefix cache: a trie over token prefixes at KV-page granularity.
+
+The TL-DRAM premise — a small near segment pays off because accesses
+concentrate on a few hot rows — holds for serving traffic at the *prefix*
+level: the hottest KV "rows" are the shared prompt prefixes (system
+prompts, few-shot headers, multi-turn history) that a slot-private cache
+re-prefills and re-stores per tenant.  This index maps full prompt pages to
+pages of the shared far pool (``repro.core.tiered_kv.PagePool``):
+
+  match  : walk the trie page-by-page along a new prompt; every matched
+           node's pool page is reused by the admitting slot (refcount++)
+           and only the unmatched suffix is prefilled — the modeled clock
+           and the real compute both drop.
+  insert : after prefill, the prompt's full pages are cached under their
+           pool ids (``PagePool.retain``): they survive the owning slots'
+           retirement at refcount zero, so re-arrivals (multi-turn chat)
+           hit them — the near-tier copy made for the first tenant keeps
+           serving every later one.
+  evict  : under pool pressure, least-recently-matched *leaf* pages with
+           refcount zero are dropped (leaf-first keeps the invariant that a
+           cached page's whole prefix chain is cached).
+
+Matching is capped so at least one prompt token is always left for the
+suffix prefill — the admission path needs last-position logits to emit the
+first token.
+
+Host-side by design: admissions are scheduler events (a few per tick), not
+per-token work, and the device-side page tables only consume the resulting
+page ids.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.tiered_kv import PagePool
+
+
+@dataclass
+class PrefixStats:
+    lookups: int = 0
+    hits: int = 0                 # lookups that matched >= 1 page
+    hit_tokens: int = 0           # prompt tokens served from cached pages
+    lookup_tokens: int = 0        # total prompt tokens seen by match()
+    inserts: int = 0              # pages newly cached
+    evictions: int = 0            # pages evicted under pool pressure
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of prompt tokens whose KV came from the cache."""
+        return self.hit_tokens / max(self.lookup_tokens, 1)
+
+
+class _Node:
+    __slots__ = ("key", "page", "children", "parent", "last_use")
+
+    def __init__(self, key, page, parent):
+        self.key = key            # tuple of page-length token ids
+        self.page = page          # pool page id holding this page's KV
+        self.children: dict = {}
+        self.parent = parent
+        self.last_use = 0
+
+
+class RadixPrefixCache:
+    """Page-granular radix index over prompt prefixes, bound to a PagePool."""
+
+    def __init__(self, pool: PagePool, page: int):
+        self.pool = pool
+        self.page = page
+        self.root = _Node(None, -1, None)
+        self.stats = PrefixStats()
+        self._tick = 0
+        self._n_nodes = 0
+
+    # -- lookup --------------------------------------------------------------
+
+    def _page_key(self, tokens, j: int):
+        return tuple(int(t) for t in tokens[j * self.page:(j + 1) * self.page])
+
+    def match(self, tokens) -> list[int]:
+        """Longest cached full-page prefix of ``tokens``; returns the pool
+        page ids, leaving >= 1 token for the suffix prefill."""
+        self._tick += 1
+        self.stats.lookups += 1
+        self.stats.lookup_tokens += len(tokens)
+        limit = (len(tokens) - 1) // self.page
+        node, out = self.root, []
+        for j in range(limit):
+            child = node.children.get(self._page_key(tokens, j))
+            if child is None:
+                break
+            child.last_use = self._tick
+            out.append(child.page)
+            node = child
+        if out:
+            self.stats.hits += 1
+            self.stats.hit_tokens += len(out) * self.page
+        return out
+
+    # -- insertion -----------------------------------------------------------
+
+    def insert(self, tokens, page_ids) -> list[int]:
+        """Cache the full pages of ``tokens`` under ``page_ids`` (one pool id
+        per page).  Pages already cached keep their existing pool id (the
+        caller's copy stays slot-private); returns the ids newly retained."""
+        node, inserted = self.root, []
+        for j in range(len(tokens) // self.page):
+            key = self._page_key(tokens, j)
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(key, int(page_ids[j]), node)
+                node.children[key] = child
+                self.pool.retain([child.page])
+                inserted.append(child.page)
+                self._n_nodes += 1
+                self.stats.inserts += 1
+            child.last_use = self._tick
+            node = child
+        return inserted
+
+    # -- allocation under pressure -------------------------------------------
+
+    def allocate(self, n: int) -> tuple[list[int], list[int]]:
+        """Allocate n pool pages, evicting LRU cached-idle leaves as needed.
+
+        Returns (pages, evicted): the caller must reset tier state for the
+        evicted page ids (their near-tier copies are stale the moment the
+        ids are reused)."""
+        evicted = []
+        while self.pool.available() < n:
+            victim = self._lru_evictable_leaf()
+            if victim is None:
+                raise RuntimeError(
+                    "page pool exhausted and nothing evictable: "
+                    f"want {n}, free {self.pool.available()}")
+            evicted.extend(self._evict(victim))
+        return self.pool.allocate(n), evicted
+
+    def _lru_evictable_leaf(self):
+        best = None
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if (node is not self.root and not node.children
+                    and self.pool.refcount[node.page] == 0
+                    and (best is None or node.last_use < best.last_use)):
+                best = node
+        return best
+
+    def _evict(self, node: _Node) -> list[int]:
+        del node.parent.children[node.key]
+        self._n_nodes -= 1
+        self.stats.evictions += 1
+        return self.pool.drop_cached([node.page])
+
+    def __len__(self) -> int:
+        return self._n_nodes

@@ -99,9 +99,77 @@ def shifting_hotspot(vocab: int, n_requests: int = 12, prompt_len: int = 24,
     return reqs
 
 
+def shared_system_prompt(vocab: int, n_requests: int = 12, sys_len: int = 64,
+                         user_len: int = 16, max_new_tokens: int = 16,
+                         gap: int = 2, seed: int = 4) -> list[Request]:
+    """Every request = one fixed system prefix + a unique user tail — the
+    serving twin of the paper's hottest-row concentration, and the scenario
+    the prefix-sharing acceptance (>= 40% prefill tokens saved) is measured
+    on.  ``sys_len`` should be a page multiple so the whole system block is
+    shareable at page granularity."""
+    rng = np.random.default_rng(seed)
+    sys_block = _zipf_tokens(rng, vocab, sys_len)
+    return [Request(rid=i, arrival=i * gap,
+                    prompt=np.concatenate(
+                        [sys_block, _zipf_tokens(rng, vocab, user_len)]),
+                    max_new_tokens=max_new_tokens)
+            for i in range(n_requests)]
+
+
+def multi_turn_chat(vocab: int, n_sessions: int = 3, turns: int = 3,
+                    base_len: int = 24, turn_len: int = 16,
+                    max_new_tokens: int = 8, think_gap: int = 24,
+                    seed: int = 5) -> list[Request]:
+    """Chat sessions whose follow-up turns re-arrive carrying the full
+    history as the prompt: turn t's prompt = turn t-1's prompt + a
+    deterministic stand-in for the assistant reply + a fresh user turn, so
+    consecutive turns of a session share a growing page-aligned prefix.
+    ``think_gap`` ticks separate a session's turns (user think time)."""
+    rng = np.random.default_rng(seed)
+    reqs, rid = [], 0
+    for s in range(n_sessions):
+        hist = _zipf_tokens(rng, vocab, base_len)
+        for t in range(turns):
+            reqs.append(Request(rid=rid, arrival=s * 2 + t * think_gap,
+                                prompt=hist.copy(),
+                                max_new_tokens=max_new_tokens))
+            rid += 1
+            hist = np.concatenate([hist,
+                                   _zipf_tokens(rng, vocab, turn_len)])
+    return sorted(reqs, key=lambda r: (r.arrival, r.rid))
+
+
+def mixed_prefix(vocab: int, n_requests: int = 12, sys_len: int = 32,
+                 user_len: int = 16, max_new_tokens: int = 8,
+                 gap: int = 3, seed: int = 6) -> list[Request]:
+    """Interleaved sharing profiles: a shared-system-prompt stream, a chat
+    session re-arriving with growing history, and lone one-shot requests —
+    the admission path must win on the sharers without taxing the loners."""
+    rng = np.random.default_rng(seed)
+    sys_block = _zipf_tokens(rng, vocab, sys_len)
+    hist = _zipf_tokens(rng, vocab, sys_len)
+    reqs = []
+    for i in range(n_requests):
+        kind = i % 3
+        if kind == 0:      # shared system prompt + unique tail
+            prompt = np.concatenate([sys_block,
+                                     _zipf_tokens(rng, vocab, user_len)])
+        elif kind == 1:    # chat session: history grows every visit
+            prompt = hist.copy()
+            hist = np.concatenate([hist, _zipf_tokens(rng, vocab, user_len)])
+        else:              # loner: nothing shareable
+            prompt = _zipf_tokens(rng, vocab, sys_len + user_len)
+        reqs.append(Request(rid=i, arrival=i * gap, prompt=prompt,
+                            max_new_tokens=max_new_tokens))
+    return reqs
+
+
 SCENARIOS = {
     "steady_zipfian": steady_zipfian,
     "bursty": bursty,
     "long_context_stragglers": long_context_stragglers,
     "shifting_hotspot": shifting_hotspot,
+    "shared_system_prompt": shared_system_prompt,
+    "multi_turn_chat": multi_turn_chat,
+    "mixed_prefix": mixed_prefix,
 }

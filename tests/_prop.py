@@ -1,0 +1,209 @@
+"""Seeded property-test harness: a hypothesis-compatible micro-subset.
+
+This container (and the CI no-hypothesis matrix leg) has no ``hypothesis``,
+so the property suites in ``test_kernels.py`` / ``test_policies.py`` used to
+silently skip via ``importorskip``.  This module provides the tiny slice of
+the hypothesis API those suites actually use — ``given``/``settings``
+decorators plus ``integers``/``booleans``/``lists``/``tuples``/
+``sampled_from`` strategies — backed by a deterministic seeded generator, so
+the properties run everywhere.  Import pattern (hypothesis stays the
+preferred fast path when installed — it shrinks better and caches failures):
+
+    try:
+        from hypothesis import given, settings
+        import hypothesis.strategies as st
+    except ImportError:                      # seeded fallback harness
+        from _prop import given, settings, strategies as st
+
+Failures are greedily shrunk (smaller ints, shorter lists) before reporting;
+the minimal case and its draw index are embedded in the raised error so a
+run can be reproduced by eye.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 50
+_SHRINK_BUDGET = 200          # max extra executions spent minimizing a failure
+
+
+class Strategy:
+    """Base: draw an example from a seeded rng; yield simpler candidates."""
+
+    def example(self, rng: random.Random):
+        raise NotImplementedError
+
+    def simpler(self, value):
+        """Yield candidate replacements, simplest first (may be empty)."""
+        return iter(())
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value, max_value):
+        self.min_value, self.max_value = int(min_value), int(max_value)
+
+    def example(self, rng):
+        return rng.randint(self.min_value, self.max_value)
+
+    def simpler(self, value):
+        lo = self.min_value
+        for cand in (lo, (lo + value) // 2, value - 1):
+            if lo <= cand < value:
+                yield cand
+
+
+class _Booleans(Strategy):
+    def example(self, rng):
+        return rng.random() < 0.5
+
+    def simpler(self, value):
+        if value:
+            yield False
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng):
+        return rng.choice(self.elements)
+
+    def simpler(self, value):
+        if self.elements and value != self.elements[0]:
+            yield self.elements[0]
+
+
+class _Lists(Strategy):
+    def __init__(self, elements: Strategy, min_size=0, max_size=None):
+        self.elements = elements
+        self.min_size = int(min_size)
+        self.max_size = int(max_size) if max_size is not None \
+            else self.min_size + 32
+
+    def example(self, rng):
+        n = rng.randint(self.min_size, self.max_size)
+        return [self.elements.example(rng) for _ in range(n)]
+
+    def simpler(self, value):
+        n = len(value)
+        if n > self.min_size:
+            half = max(self.min_size, n // 2)
+            if half < n:
+                yield value[:half]
+            yield value[:n - 1]
+            yield value[1:]
+
+
+class _Tuples(Strategy):
+    def __init__(self, *elements):
+        self.elements = elements
+
+    def example(self, rng):
+        return tuple(e.example(rng) for e in self.elements)
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` for the used subset."""
+
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 16):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def booleans():
+        return _Booleans()
+
+    @staticmethod
+    def sampled_from(elements):
+        return _SampledFrom(elements)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=None, **_):
+        return _Lists(elements, min_size, max_size)
+
+    @staticmethod
+    def tuples(*elements):
+        return _Tuples(*elements)
+
+
+def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_):
+    """Accepts (and mostly ignores) hypothesis settings; records
+    ``max_examples`` for a ``given`` applied above it."""
+
+    def deco(fn):
+        fn._prop_settings = {"max_examples": int(max_examples)}
+        return fn
+
+    return deco
+
+
+def _run(fn, args, kw, case):
+    try:
+        fn(*args, **case, **kw)
+        return None
+    except Exception as e:                    # noqa: BLE001 — reported upward
+        return e
+
+
+def _shrink(fn, args, kw, strats, case):
+    """Greedy minimization: try simpler values one kwarg at a time until no
+    candidate still fails (bounded by _SHRINK_BUDGET executions)."""
+    budget = _SHRINK_BUDGET
+    improved = True
+    while improved and budget > 0:
+        improved = False
+        for name, strat in strats.items():
+            for cand in strat.simpler(case[name]):
+                if budget <= 0:
+                    break
+                budget -= 1
+                trial = dict(case, **{name: cand})
+                if _run(fn, args, kw, trial) is not None:
+                    case = trial
+                    improved = True
+                    break
+    return case
+
+
+def given(*pos, **strats):
+    """Decorator: run the test for ``max_examples`` deterministic seeded
+    cases drawn from keyword strategies (positional strategies unsupported —
+    the suites here always bind by name, as hypothesis recommends)."""
+    assert not pos, "_prop.given supports keyword strategies only"
+
+    def deco(fn):
+        base = zlib.crc32(fn.__qualname__.encode("utf-8"))
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kw):
+            # Read at call time: @settings may sit either below @given (set
+            # on fn) or above it (set on this wrapper) — both orders are
+            # valid with real hypothesis and must behave the same here.
+            max_examples = getattr(
+                wrapper, "_prop_settings",
+                getattr(fn, "_prop_settings", {})).get(
+                    "max_examples", _DEFAULT_MAX_EXAMPLES)
+            for i in range(max_examples):
+                rng = random.Random(base * 1_000_003 + i)
+                case = {k: s.example(rng) for k, s in strats.items()}
+                err = _run(fn, args, kw, case)
+                if err is not None:
+                    minimal = _shrink(fn, args, kw, strats, case)
+                    raise AssertionError(
+                        f"property {fn.__qualname__} failed (draw #{i}); "
+                        f"minimal failing case: {minimal!r}") from err
+
+        # Hide the strategy-bound parameters from pytest's fixture
+        # resolution (hypothesis does the same): the wrapper's visible
+        # signature keeps only untouched parameters like ``self``.
+        sig = inspect.signature(fn)
+        kept = [p for n, p in sig.parameters.items() if n not in strats]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        del wrapper.__wrapped__                 # don't leak fn's signature
+        return wrapper
+
+    return deco

@@ -1,16 +1,17 @@
-"""Property-based tests of the reference near-segment policies (hypothesis).
+"""Property-based tests of the reference near-segment policies.
 
 These exercise the object oracle (`repro.tier.reference`) through the
 `repro.core.policies` compatibility shim; decision-for-decision parity of
 the vectorized engines is covered by ``tests/test_tier_parity.py``.
+Hypothesis drives the properties when installed; otherwise the seeded
+fallback harness (``tests/_prop.py``) runs them, so this suite never skips.
 """
 
-import pytest
-
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="property-based policy tests need hypothesis")
-import hypothesis.strategies as st  # noqa: E402
-from hypothesis import given, settings  # noqa: E402
+try:                                   # optional fast path: real hypothesis
+    from hypothesis import given, settings
+    import hypothesis.strategies as st
+except ImportError:                    # seeded fallback harness (tests/_prop)
+    from _prop import given, settings, strategies as st
 
 from repro.core.policies import (  # noqa: E402
     CacheState, PolicyCosts, make_policy,

@@ -180,13 +180,18 @@ class TestRaggedDecodePath:
 @pytest.mark.slow
 class TestServingBenchFull:
     def test_all_scenarios_all_policies_and_speedup(self):
-        """Acceptance: 4 scenarios x 4 policies produce reports, and
-        continuous batching sustains >= 2x sequential greedy_generate on
-        steady Zipfian with identical tokens (asserted inside)."""
+        """Acceptance: 4 scenarios x 4 policies produce reports, continuous
+        batching sustains >= 2x sequential greedy_generate on steady Zipfian
+        with identical tokens, and prefix sharing saves >= 40% prefill
+        tokens on shared-system-prompt (both asserted inside run_all)."""
         from benchmarks import serving_bench
         rows = serving_bench.run_all()
         scenario_rows = [r for r in rows if r[0] in SCENARIOS]
         assert len(scenario_rows) == 16
+        prefix_rows = {r[1]: r[2] for r in rows if r[0] == "prefix_sharing"}
+        assert prefix_rows["prefill_tokens_saved_frac"] >= 0.4
+        assert prefix_rows["outputs_identical"] is True
+        assert prefix_rows["chat_prefix_hit_rate"] > 0
 
 
 def test_serving_bench_smoke():
