@@ -15,16 +15,27 @@ Plus two acceptance cells:
 
   continuous_vs_sequential : on steady Zipfian the engine must sustain
       >= 2x the aggregate tokens/s of single-sequence ``greedy_generate``
-      serving, token-identical to that reference.
+      serving, token-identical to that reference.  Since ISSUE 4 the
+      baseline's TTFT is its modeled prefill cost (the engine's timebase),
+      so the engine/sequential p50 TTFT columns are finally comparable.
   prefix_sharing : on the shared-system-prompt trace the radix prefix
       cache (``repro.serve.prefix``) must cut prefilled tokens >= 40% and
       improve modeled p50 TTFT vs the non-sharing engine, with emitted
       tokens bit-identical (ISSUE 3 acceptance).
+  fused_kernel : dense vs fused read path on steady Zipfian (ISSUE 4
+      acceptance): emitted tokens bit-identical, and the fused path's far
+      rows touched == the sum of live non-promoted page rows (device walk
+      accounting == independent host shadow), never ``n_pages*page*B``.
+
+``run_all`` also emits **BENCH_serving.json** (tokens/s, p50/p99 latency,
+TTFT, far-rows-touched per cell) so the bench trajectory has data points.
 
   PYTHONPATH=src python -m benchmarks.serving_bench
 """
 
 from __future__ import annotations
+
+import json
 
 import jax
 
@@ -45,9 +56,10 @@ def _setup(arch_name="qwen3-1.7b", seed=0):
 
 
 def _config(policy: str, n_slots=6, max_len=128, page=16, near_pages=2,
-            interval=4, share=False) -> ServingConfig:
+            interval=4, share=False, fused=False) -> ServingConfig:
     tier = TieredKVConfig(page=page, near_pages=near_pages,
-                          interval=interval, policy=policy)
+                          interval=interval, policy=policy,
+                          fused_kernel=fused)
     return ServingConfig(n_slots=n_slots, max_len=max_len,
                          prefill_bucket=16, tier=tier, share_prefix=share)
 
@@ -102,6 +114,11 @@ def bench_continuous_vs_sequential(arch_name="qwen3-1.7b", policy="BBC"):
         f"{mismatches} sequences diverge from greedy_generate"
     assert speedup >= 2.0, \
         f"continuous batching only {speedup:.2f}x sequential"
+    # Same-timebase TTFT (ISSUE 4 satellite re-pin): the baseline's TTFT is
+    # its modeled prefill cost; the engine adds queueing on top, so its p50
+    # may exceed the baseline's on oversubscribed traces — the column pair
+    # is now meaningful, not a 0-vs-prefill artifact.
+    assert base.p50_ttft > 0, "sequential TTFT must include prefill cost"
     return [
         ("continuous_vs_sequential", "engine_tok_s",
          round(rep.tokens_per_s_wall, 1)),
@@ -109,6 +126,41 @@ def bench_continuous_vs_sequential(arch_name="qwen3-1.7b", policy="BBC"):
          round(base.tokens_per_s_wall, 1)),
         ("continuous_vs_sequential", "speedup", round(speedup, 2)),
         ("continuous_vs_sequential", "outputs_identical", mismatches == 0),
+        ("continuous_vs_sequential", "p50_ttft_engine",
+         round(rep.p50_ttft, 1)),
+        ("continuous_vs_sequential", "p50_ttft_sequential",
+         round(base.p50_ttft, 1)),
+    ]
+
+
+def bench_fused_kernel(arch_name="qwen3-1.7b", policy="BBC"):
+    """ISSUE 4 acceptance cell: the fused page-table-walking read path vs
+    the dense (materializing) oracle on steady Zipfian — emitted tokens
+    bit-identical; far rows touched == sum of live, non-promoted page rows
+    (device walk accounting == independent host shadow), a fraction of the
+    materializing path's ``n_pages * page * B``."""
+    arch, params = _setup(arch_name)
+    trace = _traces(arch.vocab)["steady_zipfian"]
+    dense_eng = ServingEngine(params, arch, _config(policy))
+    fused_eng = ServingEngine(params, arch, _config(policy, fused=True))
+    dense_eng.run(trace, "warmup")
+    dense = dense_eng.run(trace, "steady_zipfian")
+    fused_eng.run(trace, "warmup")
+    fused = fused_eng.run(trace, "steady_zipfian")
+    assert dense.outputs == fused.outputs, \
+        "fused kernel changed emitted tokens"
+    assert fused.far_rows_touched == fused.far_rows_host, \
+        "fused walk accounting diverges from the host shadow"
+    assert fused.far_rows_touched < fused.far_rows_dense
+    return [
+        ("fused_kernel", "outputs_identical", dense.outputs == fused.outputs),
+        ("fused_kernel", "far_rows_touched", fused.far_rows_touched),
+        ("fused_kernel", "far_rows_host_shadow", fused.far_rows_host),
+        ("fused_kernel", "far_rows_dense_equiv", fused.far_rows_dense),
+        ("fused_kernel", "far_rows_saved_frac",
+         round(fused.far_rows_saved_frac, 3)),
+        ("fused_kernel", "fused_tok_s", round(fused.tokens_per_s_wall, 1)),
+        ("fused_kernel", "dense_tok_s", round(dense.tokens_per_s_wall, 1)),
     ]
 
 
@@ -152,12 +204,24 @@ def bench_prefix_sharing(arch_name="qwen3-1.7b", policy="BBC"):
     ]
 
 
-def run_all():
+def run_all(out_path: str | None = "BENCH_serving.json"):
     rows = [ServingReport.HEADER] + bench_scenarios()
     rows += bench_continuous_vs_sequential()
     rows += bench_prefix_sharing()
+    rows += bench_fused_kernel()
     for r in rows:
         print(",".join(str(x) for x in r))
+    if out_path:
+        header = ServingReport.HEADER
+        matrix = [dict(zip(header, r)) for r in rows
+                  if len(r) == len(header) and r != header]
+        cells: dict = {}
+        for r in rows:
+            if len(r) == 3:
+                cells.setdefault(r[0], {})[r[1]] = r[2]
+        with open(out_path, "w") as f:
+            json.dump({"matrix": matrix, "cells": cells}, f, indent=1)
+        print(f"wrote {out_path}")
     return rows
 
 

@@ -8,6 +8,10 @@ global near tier on a background cadence.  Then replays a
 shared-system-prompt trace with the radix prefix cache on: admissions
 reuse the system prompt's pool pages and prefill only each request's
 suffix — fewer prefill tokens, better TTFT, bit-identical outputs.
+Finally re-serves the first trace with ``fused_kernel=True``: every decode
+layer reads through the page-table-walking Pallas kernel (no far-view
+materialization; docs/design.md §2e) — same tokens, a fraction of the far
+rows touched.
 
   PYTHONPATH=src python examples/serve_tiered_kv.py
 """
@@ -73,6 +77,20 @@ def main():
           f"{rep_on.p50_ttft:.0f}")
     print("outputs identical with sharing on:",
           rep_off.outputs == rep_on.outputs)
+
+    # -- fused page-table-walking read path (ISSUE 4) -----------------------
+    fused_tier = TieredKVConfig(page=16, near_pages=2, interval=4,
+                                policy="BBC", fused_kernel=True)
+    fused_cfg = ServingConfig(n_slots=4, max_len=64, prefill_bucket=16,
+                              tier=fused_tier)
+    print("\nsame steady-Zipfian trace through the FUSED walk kernel...")
+    rep_f = ServingEngine(params, arch, fused_cfg).run(trace,
+                                                       "steady_zipfian")
+    print(f"outputs identical to the dense path: "
+          f"{rep_f.outputs == rep.outputs}")
+    print(f"far rows touched: {rep_f.far_rows_touched} "
+          f"(dense path would touch {rep_f.far_rows_dense}; "
+          f"{rep_f.far_rows_saved_frac:.0%} never read)")
 
 
 if __name__ == "__main__":

@@ -74,6 +74,12 @@ class TieredKVConfig:
     gather_kernel: bool = False   # paged mode: materialize the far view with
                                   # the Pallas paged-gather kernel instead of
                                   # an XLA take (parity pinned by tests)
+    fused_kernel: bool = False    # paged mode: read through the fused
+                                  # page-table-walking Pallas kernel
+                                  # (kernels.paged_attention) — NO far-view
+                                  # materialization; far bytes touched per
+                                  # step = live non-promoted page rows only.
+                                  # The dense path stays the oracle.
 
 
 def init_tiered_cache(k_cache: jax.Array, v_cache: jax.Array,
@@ -197,14 +203,18 @@ def _far_stats(q, k, v, live_mask):
     B, H, hd = q.shape
     T, Hkv = k.shape[1], k.shape[2]
     g = H // Hkv
-    qh = q.reshape(B, Hkv, g, hd) * hd ** -0.5
-    s = jnp.einsum("bkgd,btkd->bkgt", qh, k).astype(jnp.float32)
+    qh = q.reshape(B, Hkv, g, hd)
+    s = jnp.einsum("bkgd,btkd->bkgt", qh, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
     s = jnp.where(live_mask[:, None, None, :], s, ref.NEG_INF)
     m = s.max(axis=-1)
     p = jnp.exp(s - m[..., None]) * live_mask[:, None, None, :]
     l = p.sum(axis=-1)
-    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v.dtype), v)
-    return (out.reshape(B, H, hd).astype(jnp.float32),
+    # f32 p@v accumulation, matching the Pallas kernels and the dense
+    # decode path — cross-path noise stays at reduction-order level
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v,
+                     preferred_element_type=jnp.float32)
+    return (out.reshape(B, H, hd),
             m.reshape(B, H), l.reshape(B, H))
 
 
@@ -538,44 +548,131 @@ def paged_far_view(cache: dict, cfg: TieredKVConfig):
     return far_k, far_v
 
 
-def _paged_masks(cache: dict, pos: jax.Array, cfg: TieredKVConfig):
-    """(far_live, near_live) boolean masks for the paged read path.
+def paged_step_metadata(cache: dict, lengths: jax.Array,
+                        cfg: TieredKVConfig,
+                        append_pos: jax.Array | None = None) -> dict:
+    """Per-decode-step read-path metadata — small int arrays computed ONCE
+    per step from ``(page_table, slot_of_page, page_of_slot, lengths)`` and
+    shared by every layer's read (fused kernel inputs AND the dense oracle's
+    masks).  Nothing ``(B, n_pages, C)``-shaped is built here or downstream
+    (pinned by tests/test_fused_serving.py).
+
+    lengths: (B,) live token count per slot (callers reading "tokens < pos"
+    pass ``pos``; the serving decode step passes ``pos + 1`` so the token
+    appended this step is attended, matching ``decode_attention``).
+
+    Returns:
+      walk_pid  (B, n_pages) i32 : pool ids of the slot's mapped,
+                                   NON-promoted, live pages, front-packed in
+                                   page order; entries past walk_len unused
+      walk_live (B, n_pages) i32 : live rows of each walked page (the
+                                   partial-last-page mask, 1..page)
+      walk_len  (B,) i32         : number of far pages to walk
+      j_of      (B, C) i32       : slot-page index resident in near slot c
+                                   for this sequence (-1: not a tenant)
+      near_live (B, C) i32       : live rows this sequence reads from near
+                                   slot c (0 masks the panel)
+      mapped / promoted (B, n_pages) bool : the underlying page states
+      append_pid/append_off (B,) i32 (only with ``append_pos``): the pool
+        page + in-page offset the step's new token writes through the page
+        table (sentinel P for unmapped/out-of-range — ``mode="drop"``).
+    """
+    pt = cache["page_table"]
+    B, n_pages = pt.shape
+    page = cfg.page
+    P = cache["pool_k"].shape[0]
+    C = cache["page_of_slot"].shape[0]
+    lengths = _pos_vec(lengths, B)
+
+    mapped = pt >= 0
+    sop_of_page = cache["slot_of_page"][jnp.maximum(pt, 0)]       # (B,n_pages)
+    promoted = mapped & (sop_of_page >= 0)
+    j = jnp.arange(n_pages)
+    page_live = jnp.clip(lengths[:, None] - j[None, :] * page, 0, page)
+    visit = mapped & ~promoted & (page_live > 0)
+
+    # front-pack the walk in page order (stable: non-visited keyed past end)
+    order = jnp.argsort(jnp.where(visit, j[None, :], n_pages), axis=1)
+    walk_pid = jnp.take_along_axis(jnp.where(visit, pt, 0), order, axis=1)
+    walk_live = jnp.take_along_axis(jnp.where(visit, page_live, 0), order,
+                                    axis=1)
+    walk_len = visit.sum(axis=1).astype(jnp.int32)
+
+    # near tenancy by SCATTER (j_of[b, near_slot_of(b,j)] = j), not by the
+    # (B, n_pages, C) equality tensor the per-layer path used to rebuild
+    near_slot = jnp.where(promoted, sop_of_page, C)               # (B,n_pages)
+    j_of = jnp.full((B, C), -1, jnp.int32).at[
+        jnp.arange(B)[:, None], near_slot].set(
+            jnp.broadcast_to(j[None, :], (B, n_pages)).astype(jnp.int32),
+            mode="drop")
+    near_live = jnp.where(
+        j_of >= 0, jnp.clip(lengths[:, None] - j_of * page, 0, page), 0)
+
+    meta = {"walk_pid": walk_pid.astype(jnp.int32),
+            "walk_live": walk_live.astype(jnp.int32),
+            "walk_len": walk_len,
+            "j_of": j_of, "near_live": near_live.astype(jnp.int32),
+            "mapped": mapped, "promoted": promoted}
+    if append_pos is not None:
+        append_pos = _pos_vec(append_pos, B)
+        ja = append_pos // page
+        pid = jnp.take_along_axis(pt, jnp.minimum(ja, n_pages - 1)[:, None],
+                                  axis=1)[:, 0]
+        meta["append_pid"] = jnp.where((pid >= 0) & (ja < n_pages), pid, P)
+        meta["append_off"] = append_pos % page
+    return meta
+
+
+def _paged_masks(cache: dict, pos: jax.Array, cfg: TieredKVConfig,
+                 meta: dict | None = None):
+    """(far_live, near_live) boolean masks for the DENSE paged read path,
+    derived from the hoisted per-step metadata.
 
     far_live (B, T): token is mapped, before the slot's position, and its
     page is NOT near-resident.  near_live (B, C*page): the near slot holds a
     page of this sequence and the token is before the slot's position (the
     global near tier serves every tenant of a promoted page)."""
-    pt = cache["page_table"]
-    B, n_pages = pt.shape
+    B = cache["page_table"].shape[0]
     page = cfg.page
     pos = _pos_vec(pos, B)
-    mapped = pt >= 0
-    promoted = cache["slot_of_page"][jnp.maximum(pt, 0)] >= 0    # (B,n_pages)
-    tok = jnp.arange(n_pages * page)
+    if meta is None:
+        meta = paged_step_metadata(cache, pos, cfg)
+    T = cache["page_table"].shape[1] * page
+    tok = jnp.arange(T)
     far_live = ((tok[None, :] < pos[:, None])
-                & jnp.repeat(mapped & ~promoted, page, axis=1))
-
-    page_of_slot = cache["page_of_slot"]                          # (C,)
-    occupied = page_of_slot >= 0
-    eq = (pt[:, :, None] == page_of_slot[None, None, :]) \
-        & occupied[None, None, :] & mapped[:, :, None]            # (B,np,C)
-    j_of = jnp.where(eq.any(axis=1), jnp.argmax(eq, axis=1), -1)  # (B,C)
-    near_tok = j_of[:, :, None] * page + jnp.arange(page)[None, None, :]
-    near_live = ((j_of[:, :, None] >= 0)
-                 & (near_tok < pos[:, None, None]))
+                & jnp.repeat(meta["mapped"] & ~meta["promoted"], page,
+                             axis=1))
+    near_live = (jnp.arange(page)[None, None, :]
+                 < meta["near_live"][:, :, None])
     return far_live, near_live.reshape(B, -1)
 
 
 def paged_tiered_attention(cache: dict, q: jax.Array, pos: jax.Array,
-                           cfg: TieredKVConfig) -> jax.Array:
+                           cfg: TieredKVConfig,
+                           meta: dict | None = None) -> jax.Array:
     """Two-tier decode attention over the paged far pool + global near tier.
 
     Exactly standard attention over each slot's live prefix: pages resident
     in the (shared) near buffer are served there for *every* referencing
-    sequence and masked out of the far pass; the LSE merge is exact."""
+    sequence and masked out of the far pass; the LSE merge is exact.
+
+    ``cfg.fused_kernel``: read through the page-table-walking Pallas kernel
+    (`kernels.paged_attention`) — no far-view materialization; only the
+    slot's live, non-promoted pages transit VMEM.  Default: the dense XLA
+    path (the oracle the kernel is validated against).  ``meta``: optionally
+    pass a precomputed ``paged_step_metadata`` (the serving engine computes
+    it once per step and shares it across layers)."""
     B = q.shape[0]
+    if meta is None:
+        meta = paged_step_metadata(cache, pos, cfg)
+    if cfg.fused_kernel:
+        from repro.kernels.paged_attention import paged_attention_stats
+        stats = paged_attention_stats(
+            q, cache["pool_k"], cache["pool_v"],
+            cache["near_k"], cache["near_v"], meta)
+        return ref.merge_attention_stats([stats])
     far_k, far_v = paged_far_view(cache, cfg)
-    far_live, near_live = _paged_masks(cache, pos, cfg)
+    far_live, near_live = _paged_masks(cache, pos, cfg, meta=meta)
     nk = jnp.broadcast_to(cache["near_k"][None],
                           (B,) + cache["near_k"].shape)
     nv = jnp.broadcast_to(cache["near_v"][None],

@@ -1,0 +1,188 @@
+"""Pallas flash-decode kernel that walks the page table INSIDE the kernel.
+
+The paged far tier's read path used to materialize every slot's full far
+view — a `(B, n_pages*page, Hkv, hd)` gather per decode step per layer —
+before attending it, touching `n_pages*page` rows per slot regardless of how
+few pages were actually live.  TL-DRAM's far segment is accessed *in place*
+through the isolation transistor: cost is paid per access, never per bit of
+the segment (PAPER.md §3).  This kernel applies that economics to the
+gather path itself:
+
+  grid (B, Hkv); per step the kernel
+    1. attends the shared NEAR buffer (VMEM-resident, `C` page panels)
+       under per-(slot, near-slot) live counts — the global near tier
+       serves every tenant of a promoted page with its own position mask;
+    2. walks the slot's compacted page-table WALK LIST with a
+       `fori_loop`, issuing ONE async pool->VMEM copy per *mapped,
+       non-promoted, live* page and online-softmaxing the page panel
+       under its partial-last-page live count.
+
+  Far bytes touched per step per slot == sum of live, non-promoted page
+  rows — never `n_pages * page` (asserted end-to-end by the serving
+  accounting in BENCH_serving.json).
+
+The walk list / near metadata (`core.tiered_kv.paged_step_metadata`) is a
+handful of small int arrays computed ONCE per decode step from
+`(page_table, slot_of_page, page_of_slot, lengths)` and passed to every
+layer — it rides in SMEM; nothing `(B, n_pages, C)`-shaped exists anywhere
+on the per-layer path.
+
+The pool lives in `ANY` memory (HBM): only the walked pages transit VMEM,
+via a per-page DMA into a `(page, hd)` scratch panel.  Production note: a
+double-buffered two-panel pipeline would hide the copy latency behind the
+panel matmul; the single-panel form keeps the walk logic auditable and is
+what the interpret-mode suite validates.
+
+Returns *unnormalized* `(out, m, l)` online-softmax stats, the same
+contract as `kernels.tiered_attention`, so callers can LSE-merge with other
+partial results exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def paged_attention_stats(q: jax.Array, pool_k: jax.Array,
+                          pool_v: jax.Array, near_k: jax.Array,
+                          near_v: jax.Array, meta: dict):
+    """Run the fused kernel from a ``paged_step_metadata`` dict — the one
+    entry point both the serving decode step and the core read path /
+    verification probe share (interpret mode on CPU backends)."""
+    interpret = jax.default_backend() == "cpu"
+    return paged_attention(q, pool_k, pool_v, near_k, near_v,
+                           meta["walk_pid"], meta["walk_live"],
+                           meta["walk_len"], meta["near_live"],
+                           interpret=interpret)
+
+
+def _paged_attention_kernel(h_ref, walk_pid_ref, walk_live_ref, walk_len_ref,
+                            near_live_ref, q_ref, nk_ref, nv_ref,
+                            pool_k_ref, pool_v_ref,
+                            o_ref, m_ref, l_ref,
+                            kbuf, vbuf, sem_k, sem_v, *,
+                            page: int, n_near: int, scale: float):
+    h = h_ref[0]                        # this grid step's KV head (SMEM iota:
+                                        # interpret mode lacks program_id)
+    q = q_ref[0, 0].astype(jnp.float32) * scale              # (g, hd)
+    g, hd = q.shape
+    row = jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+
+    def update(carry, kp, vp, live):
+        """One page panel's online-softmax update; rows >= live are dead."""
+        acc, m, l = carry
+        s = jax.lax.dot_general(q, kp, (((1,), (1,)), ((), ())))  # (g, page)
+        alive = row < live
+        s = jnp.where(alive, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(alive, p, 0.0)
+        l_new = l * alpha + p.sum(axis=1, keepdims=True)
+        acc_new = acc * alpha + jax.lax.dot_general(
+            p, vp, (((1,), (0,)), ((), ())))
+        return acc_new, m_new, l_new
+
+    acc = jnp.zeros((g, hd), jnp.float32)
+    m = jnp.full((g, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((g, 1), jnp.float32)
+
+    # -- near pass: C resident panels, dense in VMEM --------------------------
+    def near_body(c, carry):
+        kp = nk_ref[pl.ds(c * page, page), 0, :].astype(jnp.float32)
+        vp = nv_ref[pl.ds(c * page, page), 0, :].astype(jnp.float32)
+        return update(carry, kp, vp, near_live_ref[0, c])
+
+    acc, m, l = jax.lax.fori_loop(0, n_near, near_body, (acc, m, l))
+
+    # -- far pass: walk the slot's live, non-promoted pages -------------------
+    def far_body(i, carry):
+        pid = walk_pid_ref[0, i]
+        cp_k = pltpu.make_async_copy(pool_k_ref.at[pid, :, h], kbuf, sem_k)
+        cp_v = pltpu.make_async_copy(pool_v_ref.at[pid, :, h], vbuf, sem_v)
+        cp_k.start()
+        cp_v.start()
+        cp_k.wait()
+        cp_v.wait()
+        return update(carry, kbuf[...].astype(jnp.float32),
+                      vbuf[...].astype(jnp.float32), walk_live_ref[0, i])
+
+    acc, m, l = jax.lax.fori_loop(0, walk_len_ref[0], far_body, (acc, m, l))
+
+    o_ref[0, 0] = acc
+    m_ref[0, 0] = m[:, 0]
+    l_ref[0, 0] = l[:, 0]
+
+
+def paged_attention(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+                    near_k: jax.Array, near_v: jax.Array,
+                    walk_pid: jax.Array, walk_live: jax.Array,
+                    walk_len: jax.Array, near_live: jax.Array,
+                    interpret: bool = False):
+    """Fused two-tier paged decode attention.
+
+    q: (B, H, hd) single-token queries (GQA: H a multiple of Hkv).
+    pool_k/pool_v: (P, page, Hkv, hd) shared far pool (stays in HBM/ANY).
+    near_k/near_v: (C*page, Hkv, hd) global near buffer (VMEM-streamed).
+    walk_pid/walk_live: (B, W) int32 — per slot, the pool ids of its mapped,
+      non-promoted, live pages (front-packed) and each page's live row
+      count (partial-last-page mask); entries past ``walk_len[b]`` unused.
+    walk_len: (B,) int32.  near_live: (B, C) int32 — per (slot, near-slot)
+      live rows (0 masks the whole panel, serving non-tenants and empties).
+
+    Returns (out (B,H,hd) f32 unnormalized, m (B,H) f32, l (B,H) f32).
+    """
+    B, H, hd = q.shape
+    P, page, Hkv, _ = pool_k.shape
+    g = H // Hkv
+    n_near = near_k.shape[0] // page
+    W = walk_pid.shape[1]
+    q4 = q.reshape(B, Hkv, g, hd)
+    heads = jnp.arange(Hkv, dtype=jnp.int32)
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+
+    kernel = functools.partial(_paged_attention_kernel, page=page,
+                               n_near=n_near, scale=hd ** -0.5)
+    smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+    out, m, l = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv),
+        in_specs=[
+            smem((1,), lambda b, h: (h,)),
+            smem((1, W), lambda b, h: (b, 0)),
+            smem((1, W), lambda b, h: (b, 0)),
+            smem((1,), lambda b, h: (b,)),
+            smem((1, n_near), lambda b, h: (b, 0)),
+            pl.BlockSpec((1, 1, g, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((n_near * page, 1, hd), lambda b, h: (0, h, 0)),
+            pl.BlockSpec((n_near * page, 1, hd), lambda b, h: (0, h, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h: (b, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda b, h: (b, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, g, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, g), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, g), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((page, hd), pool_k.dtype),
+            pltpu.VMEM((page, hd), pool_v.dtype),
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(heads, i32(walk_pid), i32(walk_live), i32(walk_len), i32(near_live),
+      q4, near_k, near_v, pool_k, pool_v)
+    return (out.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H))

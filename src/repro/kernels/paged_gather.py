@@ -8,8 +8,13 @@ kernel exploits the page structure: the unit of transfer is a whole
 page instead of per-row gathers — the TL-DRAM observation that the far
 segment's cost is per-activation, not per-bit, applied to the gather path.
 
-Grid: (B, n_pages).  VMEM per step: the full pool (production note: block
-the pool once P*page*D exceeds VMEM) plus one output page panel.
+Grid: (B, n_pages).  VMEM per step: the full pool plus one output page
+panel — so the kernel REFUSES pools larger than ``vmem_budget_bytes``
+(default 64 MiB, ~4x a real core's VMEM to leave interpret-mode headroom)
+with a clear ``ValueError`` instead of letting the compiler OOM or silently
+spill.  The fused walk kernel (`kernels.paged_attention`) is the
+production-shaped alternative: it keeps the pool in HBM/ANY and DMAs one
+page panel per live, non-promoted page.
 """
 
 from __future__ import annotations
@@ -20,6 +25,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+DEFAULT_VMEM_BUDGET = 64 * 2 ** 20     # bytes of VMEM the pool may pin
+
 
 def _paged_gather_kernel(ids_ref, pool_ref, o_ref):
     pid = ids_ref[0, 0]
@@ -28,14 +35,27 @@ def _paged_gather_kernel(ids_ref, pool_ref, o_ref):
 
 
 def paged_gather(pool: jax.Array, page_ids: jax.Array,
-                 interpret: bool = False) -> jax.Array:
+                 interpret: bool = False,
+                 vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET) -> jax.Array:
     """pool: (P, page, Hkv, hd); page_ids: (B, n_pages) int32 (< 0 => zeros).
 
     Returns (B, n_pages*page, Hkv, hd): each row b is the contiguous
-    materialization of b's page table against the pool."""
+    materialization of b's page table against the pool.
+
+    Raises ValueError when the pool would pin more than
+    ``vmem_budget_bytes`` of VMEM per grid step."""
     P, page, Hkv, hd = pool.shape
     B, n_pages = page_ids.shape
     D = Hkv * hd
+    pool_bytes = P * page * D * pool.dtype.itemsize
+    if pool_bytes > vmem_budget_bytes:
+        raise ValueError(
+            f"paged_gather maps the whole pool into VMEM per grid step: "
+            f"pool is {pool_bytes} bytes ({P} pages x {page} x {D} x "
+            f"{pool.dtype.itemsize}B) > budget {vmem_budget_bytes}. "
+            f"Use the fused walk kernel (kernels.paged_attention, "
+            f"TieredKVConfig.fused_kernel) for pools this large, or raise "
+            f"vmem_budget_bytes explicitly.")
     pool2 = pool.reshape(P, page, D)
 
     out = pl.pallas_call(

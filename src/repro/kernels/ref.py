@@ -105,6 +105,55 @@ def paged_gather_ref(pool: jax.Array, page_ids: jax.Array) -> jax.Array:
     return gathered.reshape(B, n_pages * page, Hkv, hd)
 
 
+def paged_attention_ref(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+                        near_k: jax.Array, near_v: jax.Array,
+                        walk_pid: jax.Array, walk_live: jax.Array,
+                        walk_len: jax.Array, near_live: jax.Array):
+    """Semantic ground truth for ``kernels.paged_attention``: materialized
+    softmax over the union of (near panels under per-slot live counts) and
+    (walked far pages under partial-page live counts).
+
+    q: (B,H,hd); pool: (P,page,Hkv,hd); near: (C*page,Hkv,hd);
+    walk_pid/walk_live: (B,W); walk_len: (B,); near_live: (B,C).
+    Returns unnormalized (out, m, l) stats like the kernel.
+    """
+    B, H, hd = q.shape
+    P, page, Hkv, _ = pool_k.shape
+    g = H // Hkv
+    C = near_k.shape[0] // page
+    W = walk_pid.shape[1]
+
+    # far: gather the walked pages densely, then mask dead rows/entries
+    k_far = jnp.take(pool_k, walk_pid, axis=0)        # (B, W, page, Hkv, hd)
+    v_far = jnp.take(pool_v, walk_pid, axis=0)
+    walked = jnp.arange(W)[None, :] < walk_len[:, None]            # (B, W)
+    live_f = (jnp.arange(page)[None, None, :] < walk_live[:, :, None]) \
+        & walked[:, :, None]                                       # (B,W,page)
+    k_far = k_far.reshape(B, W * page, Hkv, hd)
+    v_far = v_far.reshape(B, W * page, Hkv, hd)
+    live_f = live_f.reshape(B, W * page)
+
+    # near: broadcast the shared buffer, mask per-(slot, near-slot) counts
+    k_near = jnp.broadcast_to(near_k[None], (B,) + near_k.shape)
+    v_near = jnp.broadcast_to(near_v[None], (B,) + near_v.shape)
+    live_n = (jnp.arange(page)[None, None, :]
+              < near_live[:, :, None]).reshape(B, C * page)
+
+    k = jnp.concatenate([k_near, k_far], axis=1)
+    v = jnp.concatenate([v_near, v_far], axis=1)
+    live = jnp.concatenate([live_n, live_f], axis=1)               # (B, T)
+
+    qh = q.reshape(B, Hkv, g, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgd,btkd->bkgt", qh,
+                   k.astype(jnp.float32))
+    s = jnp.where(live[:, None, None, :], s, NEG_INF)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None]) * live[:, None, None, :]
+    l = p.sum(axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return (out.reshape(B, H, hd), m.reshape(B, H), l.reshape(B, H))
+
+
 def ssd_chunk_scan_ref(states: jax.Array, decays: jax.Array,
                        h0: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Inter-chunk SSD state recurrence.

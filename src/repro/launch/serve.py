@@ -40,6 +40,23 @@ def make_decode_step(arch: ArchConfig):
     return decode_step
 
 
+def make_paged_tiered_decode_step(arch: ArchConfig, tier_cfg: TieredKVConfig):
+    """Fused paged tiered decode step (ISSUE 4): every layer reads through
+    the page-table-walking Pallas kernel over the per-layer shared page pool
+    + per-layer global near buffer — no far-view materialization on the hot
+    path.  ``cache`` carries the extra pool/near leaves (see
+    ``transformer.paged_decode_step``); ``meta`` is the per-step read
+    metadata (`core.tiered_kv.paged_step_metadata`), computed ONCE per
+    decode step by the serving engine and shared by every layer.  Returns
+    (logits, new_cache, aux) with the layer-0 scoring query in ``aux``."""
+    del tier_cfg  # geometry rides in the cache leaves + meta shapes
+
+    def decode_step(params, cache, batch, meta):
+        return transformer.paged_decode_step(params, cache, batch, arch,
+                                             meta, want_aux=True)
+    return decode_step
+
+
 def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,
                                    page: int = 128, window: int = 1024,
                                    tier_cfg: TieredKVConfig | None = None):

@@ -170,6 +170,28 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     return out.astype(q.dtype)
 
 
+def paged_decode_attention(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+                           near_k: jax.Array, near_v: jax.Array,
+                           meta: dict) -> jax.Array:
+    """Single-token attention through the fused paged tier (ISSUE 4).
+
+    The TL-DRAM serving read path: instead of materializing the slot's far
+    view and masking it, the Pallas kernel (`kernels.paged_attention`) walks
+    the slot's page table in-kernel — one pool load per live, non-promoted
+    page — and attends the shared near buffer under per-(slot, near-slot)
+    live counts.  ``meta`` is `core.tiered_kv.paged_step_metadata`, computed
+    once per decode step and shared by every layer.
+
+    q: (B,1,H,hd); pool_k/pool_v: (P,page,Hkv,hd); near: (C*page,Hkv,hd).
+    Returns (B,1,H,hd), exactly standard attention over the live prefix.
+    """
+    from repro.kernels import ref
+    from repro.kernels.paged_attention import paged_attention_stats
+    stats = paged_attention_stats(q[:, 0], pool_k, pool_v, near_k, near_v,
+                                  meta)
+    return ref.merge_attention_stats([stats])[:, None].astype(q.dtype)
+
+
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      pos: jax.Array, window: int = 0) -> jax.Array:
     """Single-token attention against a (possibly ring-buffer) KV cache.
@@ -184,9 +206,14 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     T, Hkv = k_cache.shape[1], k_cache.shape[2]
     groups = H // Hkv
     scale = hd ** -0.5
-    qh = (q[:, 0] * scale).reshape(B, Hkv, groups, hd)
-
-    scores = jnp.einsum("bkgd,btkd->bkgt", qh, k_cache).astype(jnp.float32)
+    # f32-accumulated q·k scores (not bf16-rounded-then-cast): every decode
+    # read path — this one, the tiered LSE merges, the fused paged kernel —
+    # scores in f32, keeping cross-path logit noise at reduction-order
+    # level.  preferred_element_type keeps the bf16 operands un-materialized
+    # (bf16 MXU inputs, f32 accumulation); the scale is applied in f32.
+    qh = q[:, 0].reshape(B, Hkv, groups, hd)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qh, k_cache,
+                        preferred_element_type=jnp.float32) * scale
     slots = jnp.arange(T)[None, :]                           # (1,T)
     pos_b = jnp.broadcast_to(jnp.asarray(pos), (B,))[:, None]  # (B,1)
     if window:
@@ -196,6 +223,12 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     else:
         valid = slots <= pos_b
     scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
-    p = jax.nn.softmax(scores, axis=-1).astype(v_cache.dtype)
-    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache)
+    # keep p in f32 for the value matmul: every decode read path (this
+    # dense path, the two-tier LSE merges, the fused paged kernel)
+    # accumulates p@v in f32, so cross-path logit noise stays at f32
+    # reduction-order level (~1e-6) and fused-vs-dense token parity holds
+    # bit-for-bit on real traces (tests/test_fused_serving.py)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
     return out.reshape(B, 1, H, hd).astype(q.dtype)

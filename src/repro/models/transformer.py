@@ -27,7 +27,7 @@ from repro.models import ssm as ssm_lib
 from repro.sharding import ctx
 from repro.models.layers import (
     apply_mrope, apply_rope, decode_attention, flash_attention, gelu_mlp,
-    rms_norm, swiglu,
+    paged_decode_attention, rms_norm, swiglu,
 )
 
 Params = dict
@@ -187,13 +187,18 @@ def _block_train(p, x, positions, arch: ArchConfig, kv_prefix=None):
     return x + mlp_out, aux, kv, ssm_state, conv_tail
 
 
-def _block_decode(p, x, cache_layer, pos, arch: ArchConfig):
+def _block_decode(p, x, cache_layer, pos, arch: ArchConfig, kv_hook=None):
     """One layer, single-token decode.  cache_layer is this layer's slice.
 
     ``pos`` is a scalar position, or a ragged (B,) vector of per-sequence
     positions (the continuous-batching slot pool).  Returns
     (h, new_cache, q) — q is this layer's rotated query (attention
     families; None for ssm), used by the serving engine's tier scoring.
+
+    ``kv_hook(q, k, v, cache_layer) -> (attn, cache_updates)``: optional
+    override of the KV write + attend section (rotated q/k/v in, attention
+    output out) — the fused paged tier routes through here
+    (``paged_decode_step``) while RoPE/MLP/norm stay shared.
     """
     new_cache = dict(cache_layer)
     ragged = jnp.asarray(pos).ndim == 1
@@ -228,20 +233,24 @@ def _block_decode(p, x, cache_layer, pos, arch: ArchConfig):
     else:
         q = apply_rope(q, positions, arch.rope_theta)
         k = apply_rope(k, positions, arch.rope_theta)
-    T = cache_layer["k"].shape[1]
-    slot = pos % T if arch.sliding_window else jnp.minimum(pos, T - 1)
-    if ragged:
-        b_idx = jnp.arange(x.shape[0])
-        k_cache = cache_layer["k"].at[b_idx, slot].set(k[:, 0])
-        v_cache = cache_layer["v"].at[b_idx, slot].set(v[:, 0])
+    if kv_hook is not None:
+        out, cache_updates = kv_hook(q, k, v, cache_layer)
+        new_cache.update(cache_updates)
     else:
-        k_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache_layer["k"], k, slot, 1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(
-            cache_layer["v"], v, slot, 1)
-    new_cache.update(k=k_cache, v=v_cache)
-    out = decode_attention(q, k_cache, v_cache, pos,
-                           window=arch.sliding_window)
+        T = cache_layer["k"].shape[1]
+        slot = pos % T if arch.sliding_window else jnp.minimum(pos, T - 1)
+        if ragged:
+            b_idx = jnp.arange(x.shape[0])
+            k_cache = cache_layer["k"].at[b_idx, slot].set(k[:, 0])
+            v_cache = cache_layer["v"].at[b_idx, slot].set(v[:, 0])
+        else:
+            k_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache_layer["k"], k, slot, 1)
+            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                cache_layer["v"], v, slot, 1)
+        new_cache.update(k=k_cache, v=v_cache)
+        out = decode_attention(q, k_cache, v_cache, pos,
+                               window=arch.sliding_window)
     attn_out = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"])
 
     if arch.family == "hybrid":
@@ -475,5 +484,89 @@ def decode_step(params: Params, cache: Cache, batch: dict, arch: ArchConfig,
     new_cache = {**new_layer_cache, "pos": pos + 1}
     if want_aux:
         aux = {"q0": qs[0][:, 0].astype(jnp.float32)} if qs is not None else {}
+        return logits, new_cache, aux
+    return logits, new_cache
+
+
+def paged_decode_step(params: Params, cache: Cache, batch: dict,
+                      arch: ArchConfig, meta: dict,
+                      compute_dtype=jnp.bfloat16, want_aux: bool = False):
+    """One decode step read through the FUSED paged tier (ISSUE 4 tentpole).
+
+    Identical math to ``decode_step`` — every layer attends its slot's full
+    live prefix — but the read path is the page-table-walking kernel
+    (`kernels.paged_attention`) over the per-layer shared page pool plus the
+    per-layer global near buffer, instead of dense attention over a
+    materialized per-slot cache.  Per layer and per step this touches only
+    each slot's live, non-promoted far pages.
+
+    ``cache`` carries, besides the usual ``k``/``v``/``pos`` leaves (the
+    dense rows remain the master copy the oracle and the scoring pass read):
+
+      pool_k/pool_v : (L, P, page, Hkv, hd)  per-layer shared far pool
+      near_k/near_v : (L, C*page, Hkv, hd)   per-layer global near buffer
+
+    ``meta`` is ``core.tiered_kv.paged_step_metadata(paged, pos + 1,
+    cfg, append_pos=pos)`` — computed ONCE per step by the engine and shared
+    by every layer (lengths = pos + 1 so the token appended this step is
+    attended, matching ``decode_attention``'s ``slot <= pos`` mask).  The
+    new token's K/V is written through the page table into the pool
+    (``append_pid``/``append_off``; sentinel drops) AND into the dense rows.
+
+    Returns (logits, new_cache[, aux]) like ``decode_step``.
+    """
+    assert arch.n_heads and arch.ssm is None and not arch.sliding_window, \
+        "fused paged decode requires a plain-attention architecture"
+    x = _embed_inputs(params, batch, arch).astype(compute_dtype)
+    x = ctx.constrain(x, ctx.BATCH, ctx.SEQ, None)
+    pos = cache["pos"]
+    if jnp.asarray(pos).ndim == 0:
+        pos = jnp.broadcast_to(pos, (x.shape[0],))
+    B = x.shape[0]
+    b_idx = jnp.arange(B)
+
+    cparams = jax.tree.map(
+        lambda a: a.astype(compute_dtype)
+        if a.dtype == jnp.float32 and a.ndim > 1 else a, params["layers"])
+    # the near buffers are read-only per step: scan them as inputs but keep
+    # them OUT of the per-layer cache so the scan does not stack an
+    # untouched copy of both buffers every decode step
+    layer_cache = {k: v for k, v in cache.items()
+                   if k not in ("pos", "near_k", "near_v")}
+
+    def body(h, scanned):
+        layer_params, cl, nk, nv = scanned
+
+        def kv_hook(q, k, v, cl2):
+            T = cl2["k"].shape[1]
+            slot = jnp.minimum(pos, T - 1)
+            k_cache = cl2["k"].at[b_idx, slot].set(k[:, 0])
+            v_cache = cl2["v"].at[b_idx, slot].set(v[:, 0])
+            pool_k = cl2["pool_k"].at[meta["append_pid"],
+                                      meta["append_off"]].set(k[:, 0],
+                                                              mode="drop")
+            pool_v = cl2["pool_v"].at[meta["append_pid"],
+                                      meta["append_off"]].set(v[:, 0],
+                                                              mode="drop")
+            out = paged_decode_attention(q, pool_k, pool_v, nk, nv, meta)
+            return out, dict(k=k_cache, v=v_cache, pool_k=pool_k,
+                             pool_v=pool_v)
+
+        h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
+        h, new_cl, q = _block_decode(layer_params, h, cl, pos, arch,
+                                     kv_hook=kv_hook)
+        h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
+        return h, (new_cl, q if want_aux else None)
+
+    x, (new_layer_cache, qs) = jax.lax.scan(
+        body, x, (cparams, layer_cache, cache["near_k"], cache["near_v"]))
+    x = rms_norm(x, params["final_norm"].astype(compute_dtype))
+    logits = _lm_logits(params, x, arch)
+    logits = ctx.constrain(logits, ctx.BATCH,
+                           *([None] * (logits.ndim - 2)), ctx.MODEL)
+    new_cache = {**new_layer_cache, "near_k": cache["near_k"],
+                 "near_v": cache["near_v"], "pos": cache["pos"] + 1}
+    if want_aux:
+        aux = {"q0": qs[0][:, 0].astype(jnp.float32)}
         return logits, new_cache, aux
     return logits, new_cache

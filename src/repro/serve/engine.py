@@ -104,6 +104,10 @@ class ServingEngine:
             "prefix sharing needs 1-D positions"
         self.params, self.arch, self.cfg = params, arch, cfg
         self.n_pages = cfg.max_len // cfg.tier.page
+        # fused mode (ISSUE 4): the decode step reads through the
+        # page-table-walking kernel over PER-LAYER pool/near buffers —
+        # far bytes touched per step = live non-promoted page rows only
+        self.fused = bool(cfg.tier.fused_kernel)
         # Pool sizing: worst case (no sharing) every slot maps private
         # pages; the slack keeps retired prompts cached for re-arrivals.
         self.pool_pages = cfg.pool_pages if cfg.pool_pages is not None \
@@ -155,6 +159,33 @@ class ServingEngine:
 
         self._gather_prefix = jax.jit(gather_prefix)
         self._write_pages = jax.jit(write_pages)
+
+        if self.fused:
+            from repro.launch.serve import make_paged_tiered_decode_step
+            self._decode_fused = jax.jit(
+                make_paged_tiered_decode_step(arch, cfg.tier))
+            # per-step read metadata, computed ONCE per tick and shared by
+            # every layer: lengths = pos + 1 (the appended token is live),
+            # append routing from pos
+            self._meta = jax.jit(
+                lambda paged, pos: tkv.paged_step_metadata(
+                    paged, pos + 1, cfg.tier, append_pos=pos))
+
+            def sync_near(pool_k, pool_v, page_of_slot):
+                """Re-derive the per-layer near buffers from the per-layer
+                pools under the (just-changed) global near mapping.  The
+                near-copy == pool-master invariant makes a full re-gather
+                equivalent to incremental page copies; C is small and this
+                runs only when the mapping changes (plan/pin/release)."""
+                safe = jnp.maximum(page_of_slot, 0)
+                occ = (page_of_slot >= 0)[None, :, None, None, None]
+                nk = jnp.where(occ, pool_k[:, safe], 0)
+                nv = jnp.where(occ, pool_v[:, safe], 0)
+                L, C, pg, Hkv, hd = nk.shape
+                return (nk.reshape(L, C * pg, Hkv, hd),
+                        nv.reshape(L, C * pg, Hkv, hd))
+
+            self._sync_near = jax.jit(sync_near)
 
     # -- admission ----------------------------------------------------------
 
@@ -209,17 +240,29 @@ class ServingEngine:
         self.cache["k"] = self.cache["k"].at[:, slot].set(pcache["k"][:, 0])
         self.cache["v"] = self.cache["v"].at[:, slot].set(pcache["v"][:, 0])
 
-        # 4. cache the prompt's new full pages for future sharers
+        # 4. write the slot's fresh pages into the full-layer pool: the
+        #    FUSED read path walks the pool, so it needs every page of the
+        #    row (matched shared pages are already there); prefix sharing
+        #    additionally indexes the prompt's new full pages for sharers
+        if self.fused:
+            ids = np.asarray(row, np.int32).copy()
+            ids[:m] = -1
+            self.pool_layers_k, self.pool_layers_v = self._write_pages(
+                self.pool_layers_k, self.pool_layers_v,
+                pcache["k"][:, 0], pcache["v"][:, 0], jnp.asarray(ids))
         if self.prefix is not None:
             n_full = S // page
             if n_full > m:
-                ids = -np.ones(self.n_pages, np.int32)
-                ids[m:n_full] = row[m:n_full]
-                self.pool_layers_k, self.pool_layers_v = self._write_pages(
-                    self.pool_layers_k, self.pool_layers_v,
-                    pcache["k"][:, 0], pcache["v"][:, 0],
-                    jnp.asarray(ids))
+                if not self.fused:   # fused already wrote the whole row
+                    ids = -np.ones(self.n_pages, np.int32)
+                    ids[m:n_full] = row[m:n_full]
+                    self.pool_layers_k, self.pool_layers_v = \
+                        self._write_pages(
+                            self.pool_layers_k, self.pool_layers_v,
+                            pcache["k"][:, 0], pcache["v"][:, 0],
+                            jnp.asarray(ids))
                 self.prefix.insert(prompt[:n_full * page], row[:n_full])
+        self._after_mapping_change()
 
         self.pos[slot] = S
         self.tok[slot] = first
@@ -255,8 +298,41 @@ class ServingEngine:
                                                  self.cfg.tier)
         self.pt_host[slot] = -1
         self.paged["page_table"] = self.paged["page_table"].at[slot].set(-1)
+        self._after_mapping_change()
         self.free.append(slot)
         self.free.sort()
+
+    # -- fused-mode bookkeeping ---------------------------------------------
+
+    def _after_mapping_change(self):
+        """Fused mode: mark the per-layer near buffers / host residency
+        mirror stale after any event that moves the global near mapping or
+        the page tables (plan / pin / release / admit / retire).  The
+        actual re-sync happens once per tick (``_flush_mapping``) — N
+        retires + M admits in one tick cost one gather, not N+M."""
+        self._mapping_dirty = True
+
+    def _flush_mapping(self):
+        if not (self.fused and self._mapping_dirty):
+            return
+        self.near_layers_k, self.near_layers_v = self._sync_near(
+            self.pool_layers_k, self.pool_layers_v,
+            self.paged["page_of_slot"])
+        sop = np.asarray(self.paged["slot_of_page"])
+        self._promoted_host = (self.pt_host >= 0) \
+            & (sop[np.maximum(self.pt_host, 0)] >= 0)
+        self._mapping_dirty = False
+
+    def _far_rows_shadow(self) -> int:
+        """Host-side recomputation of the fused step's far rows touched:
+        per slot, the live rows of its mapped, non-promoted pages (lengths
+        = pos + 1: the token appended this step is attended)."""
+        lengths = self.pos + 1
+        page_start = np.arange(self.n_pages) * self.cfg.tier.page
+        live = np.clip(lengths[:, None] - page_start[None, :], 0,
+                       self.cfg.tier.page)
+        walk = (self.pt_host >= 0) & ~self._promoted_host
+        return int((live * walk).sum())
 
     # -- background tier maintenance ----------------------------------------
 
@@ -305,6 +381,7 @@ class ServingEngine:
             need = active & ~self._static_pinned
             if need.any():
                 clock = self._pin_static(np.asarray(masses_dev), need, clock)
+                self._after_mapping_change()
         else:
             before = int(self.paged["migrations"])
             self.paged = self._plan(self.paged, q0, pos_vec, idle,
@@ -312,6 +389,8 @@ class ServingEngine:
             moved = int(self.paged["migrations"]) - before
             clock += cfg.cost.migration_cost(moved, tier.page)
             self.report.migrations += moved
+            if moved:     # mapping unchanged when nothing migrated
+                self._after_mapping_change()
         sop = np.asarray(self.paged["slot_of_page"])
         promoted = (self.pt_host >= 0) & (sop[np.maximum(self.pt_host, 0)]
                                           >= 0)              # (B, n_pages)
@@ -352,17 +431,31 @@ class ServingEngine:
         self.pool = PagePool(self.pool_pages)
         self.prefix = RadixPrefixCache(self.pool, cfg.tier.page) \
             if cfg.share_prefix else None
-        if cfg.share_prefix:
-            # Full-layer K/V store for prefix reuse, indexed by pool page id.
-            # Only trie-cached prompt pages are ever written/read, so sizing
-            # it to the whole pool trades memory for a flat index; a
-            # production deployment would key a smaller store by cached
-            # page (the trie already owns that lifecycle).
+        if cfg.share_prefix or self.fused:
+            # Full-layer K/V store indexed by pool page id.  Prefix sharing
+            # reads cached prompt pages out of it; the FUSED read path makes
+            # it the actual serving far tier (every layer's kernel walks
+            # it).  Sizing it to the whole pool trades memory for a flat
+            # index; a production deployment would key a smaller store by
+            # cached page (the trie already owns that lifecycle).
             hd = arch.resolved_head_dim
             shape = (arch.n_layers, self.pool_pages, cfg.tier.page,
                      arch.n_kv_heads, hd)
             self.pool_layers_k = jnp.zeros(shape, self.cache["k"].dtype)
             self.pool_layers_v = jnp.zeros(shape, self.cache["v"].dtype)
+        if self.fused:
+            # per-layer global near buffers (layer 0 mirrors self.paged's)
+            hd = arch.resolved_head_dim
+            nshape = (arch.n_layers, cfg.tier.near_pages * cfg.tier.page,
+                      arch.n_kv_heads, hd)
+            self.near_layers_k = jnp.zeros(nshape, self.cache["k"].dtype)
+            self.near_layers_v = jnp.zeros(nshape, self.cache["v"].dtype)
+            # host mirror of per-(slot, page) near residency, re-synced
+            # (with the near buffers) once per tick when the mapping moved
+            # — drives the independent shadow accounting of far rows
+            # touched (ISSUE 4 acceptance)
+            self._promoted_host = np.zeros((cfg.n_slots, self.n_pages), bool)
+            self._mapping_dirty = False
         self.pt_host = -np.ones((cfg.n_slots, self.n_pages), np.int64)
         self.pos = np.zeros(cfg.n_slots, np.int64)
         self.tok = np.zeros(cfg.n_slots, np.int64)
@@ -396,9 +489,33 @@ class ServingEngine:
                 continue
 
             self.cache["pos"] = jnp.asarray(self.pos, jnp.int32)
-            logits, new_cache, aux = self._decode(
-                self.params, self.cache, {"tokens": jnp.asarray(
-                    self.tok[:, None], jnp.int32)})
+            tokens = {"tokens": jnp.asarray(self.tok[:, None], jnp.int32)}
+            if self.fused:
+                self._flush_mapping()
+                meta = self._meta(self.paged, self.cache["pos"])
+                fcache = {**self.cache,
+                          "pool_k": self.pool_layers_k,
+                          "pool_v": self.pool_layers_v,
+                          "near_k": self.near_layers_k,
+                          "near_v": self.near_layers_v}
+                logits, new_cache, aux = self._decode_fused(
+                    self.params, fcache, tokens, meta)
+                self.pool_layers_k = new_cache.pop("pool_k")
+                self.pool_layers_v = new_cache.pop("pool_v")
+                new_cache.pop("near_k")
+                new_cache.pop("near_v")
+                # the walk's accounting (device) + an independent host
+                # shadow: both must equal the live non-promoted page rows
+                self.report.far_rows_touched += int(meta["walk_live"].sum())
+                self.report.far_rows_host += self._far_rows_shadow()
+            else:
+                logits, new_cache, aux = self._decode(
+                    self.params, self.cache, tokens)
+                # the dense step materializes/attends the full far view
+                self.report.far_rows_touched += \
+                    self.n_pages * cfg.tier.page * cfg.n_slots
+            self.report.far_rows_dense += \
+                self.n_pages * cfg.tier.page * cfg.n_slots
             self.cache = new_cache
             toks = np.asarray(jnp.argmax(logits, axis=-1))[:, 0]
 
@@ -453,11 +570,14 @@ def sequential_baseline(params, arch: ArchConfig, trace: list[Request],
             prefill_fn=prefill_fn)
         report.outputs[req.rid] = np.asarray(toks)[0].tolist()
         S = int(req.prompt.shape[0])
-        clock += cfg.cost.prefill_cost(S)
+        # TTFT = modeled prefill cost — the same timebase the engine uses
+        # (its TTFT is queueing + prefill; the baseline models no queue).
+        ttft = cfg.cost.prefill_cost(S)
+        clock += ttft
         last = clock
         report.tokens += 1
-        report.token_latencies.append(0.0)   # no queueing modeled: TTFT = 0
-        report.ttfts.append(0.0)
+        report.token_latencies.append(ttft)
+        report.ttfts.append(ttft)
         report.prefill_tokens += S
         report.prefill_tokens_full += S
         for i in range(1, req.max_new_tokens):

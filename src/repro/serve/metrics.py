@@ -83,6 +83,14 @@ class ServingReport:
     prefix_hit_tokens: int = 0       # prompt tokens served from cached pages
     prefix_lookups: int = 0
     prefix_hits: int = 0
+    # far-tier rows read per decode step, accumulated over the run (per
+    # sequence per step, layer-invariant).  The fused walk touches only
+    # live, non-promoted pages; the materializing path touches the whole
+    # (B, n_pages*page) far view regardless (ISSUE 4 acceptance).
+    far_rows_touched: int = 0        # what the configured read path touched
+    far_rows_host: int = 0           # independent host-side shadow of the
+                                     # fused walk (device/host parity pin)
+    far_rows_dense: int = 0          # what a materializing path would touch
 
     @property
     def tokens_per_s_wall(self) -> float:
@@ -112,6 +120,16 @@ class ServingReport:
     def p50_ttft(self) -> float:
         return percentiles(self.ttfts, qs=(50,))[0]
 
+    @property
+    def far_rows_saved_frac(self) -> float:
+        """Fraction of far-view rows the configured read path did NOT touch
+        vs the materializing baseline (0.0 for the dense path itself, and
+        0.0 for runs that tracked no far-row accounting at all, e.g. the
+        sequential baseline)."""
+        if self.far_rows_dense == 0:
+            return 0.0
+        return 1.0 - self.far_rows_touched / self.far_rows_dense
+
     def summary_row(self) -> tuple:
         p50, p99 = percentiles(self.token_latencies)
         return (self.scenario, self.policy, self.tokens,
@@ -120,9 +138,9 @@ class ServingReport:
                 round(self.mean_hit_mass, 3), self.migrations,
                 round(p50, 1), round(p99, 1),
                 round(self.prefix_hit_rate, 3), self.prefill_tokens,
-                round(self.p50_ttft, 1))
+                round(self.p50_ttft, 1), self.far_rows_touched)
 
     HEADER = ("scenario", "policy", "tokens", "tok/s_wall",
               "tok/kcost_modeled", "near_hit_mass", "migrations",
               "p50_lat", "p99_lat", "prefix_hit_rate", "prefill_toks",
-              "p50_ttft")
+              "p50_ttft", "far_rows")

@@ -13,6 +13,8 @@ except ImportError:                    # seeded fallback harness (tests/_prop)
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_fwd
+from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_gather import paged_gather
 from repro.kernels.ssd_scan import ssd_chunk_scan
 from repro.kernels.tiered_attention import near_decode_attention
 from repro.kernels.tiered_gather import tiered_gather
@@ -127,6 +129,113 @@ class TestNearDecodeAttention:
         want = jnp.stack(outs)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-5, atol=1e-5)
+
+
+def _walk_meta(key, B, P, page, n_pages, C):
+    """Random but well-formed walk/near metadata for the fused kernel:
+    distinct pool ids per slot, live counts in [1, page] (partial last
+    pages included), near live counts in [0, page] (0 = non-tenant)."""
+    ks = jax.random.split(key, 4)
+    walk_len = jax.random.randint(ks[0], (B,), 0, n_pages + 1)
+    pid = jnp.stack([jax.random.permutation(k, P)[:n_pages]
+                     for k in jax.random.split(ks[1], B)]).astype(jnp.int32)
+    walk_live = jax.random.randint(ks[2], (B, n_pages), 1, page + 1)
+    near_live = jax.random.randint(ks[3], (B, C), 0, page + 1)
+    return pid, walk_live, walk_len.astype(jnp.int32), near_live
+
+
+class TestPagedAttention:
+    """Fused page-table-walking decode kernel vs its jnp oracle (ISSUE 4)."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("B,H,Hkv,hd,page,n_pages,C,P", [
+        (2, 4, 2, 64, 16, 4, 2, 12),     # GQA
+        (1, 8, 8, 32, 8, 6, 3, 10),      # MHA, more pages than near slots
+        (3, 6, 2, 128, 32, 2, 4, 8),     # wide head, near > far
+        (2, 2, 1, 16, 8, 5, 1, 16),      # MQA, tiny
+    ])
+    def test_against_ref(self, dtype, B, H, Hkv, hd, page, n_pages, C, P):
+        ks = jax.random.split(jax.random.key(11), 6)
+        q = _rand(ks[0], (B, H, hd), dtype)
+        pool_k = _rand(ks[1], (P, page, Hkv, hd), dtype)
+        pool_v = _rand(ks[2], (P, page, Hkv, hd), dtype)
+        near_k = _rand(ks[3], (C * page, Hkv, hd), dtype)
+        near_v = _rand(ks[4], (C * page, Hkv, hd), dtype)
+        pid, walk_live, walk_len, near_live = _walk_meta(
+            ks[5], B, P, page, n_pages, C)
+        got = paged_attention(q, pool_k, pool_v, near_k, near_v, pid,
+                              walk_live, walk_len, near_live, interpret=True)
+        want = ref.paged_attention_ref(q, pool_k, pool_v, near_k, near_v,
+                                       pid, walk_live, walk_len, near_live)
+        # compare m, then normalized outputs (unnormalized scale is
+        # implementation-defined between the two accumulation orders)
+        np.testing.assert_allclose(np.asarray(got[1]), np.asarray(want[1]),
+                                   **TOL[dtype])
+        g_out = np.asarray(got[0]) / np.maximum(np.asarray(got[2])[..., None],
+                                                1e-30)
+        w_out = np.asarray(want[0]) / np.maximum(
+            np.asarray(want[2])[..., None], 1e-30)
+        np.testing.assert_allclose(g_out, w_out, **TOL[dtype])
+
+    def test_empty_walk_and_dead_near_yield_zero_mass(self):
+        """A slot with nothing live (walk_len 0, all near_live 0) must
+        produce l == 0 — the LSE merge then yields zeros, not NaNs."""
+        B, H, Hkv, hd, page, C, P = 1, 2, 1, 16, 8, 2, 4
+        ks = jax.random.split(jax.random.key(12), 5)
+        q = _rand(ks[0], (B, H, hd), jnp.float32)
+        pool = _rand(ks[1], (P, page, Hkv, hd), jnp.float32)
+        near = _rand(ks[2], (C * page, Hkv, hd), jnp.float32)
+        zeros2 = jnp.zeros((B, 3), jnp.int32)
+        out, m, l = paged_attention(
+            q, pool, pool, near, near, zeros2, zeros2,
+            jnp.zeros((B,), jnp.int32), jnp.zeros((B, C), jnp.int32),
+            interpret=True)
+        assert np.all(np.asarray(l) == 0.0)
+        assert np.all(np.asarray(out) == 0.0)
+        merged = ref.merge_attention_stats([(out, m, l)])
+        assert np.isfinite(np.asarray(merged)).all()
+
+    @given(seed=st.integers(0, 99))
+    @settings(max_examples=10, deadline=None)
+    def test_property_random_meta(self, seed):
+        B, H, Hkv, hd, page, n_pages, C, P = 2, 4, 2, 16, 8, 3, 2, 9
+        ks = jax.random.split(jax.random.key(seed), 6)
+        q = _rand(ks[0], (B, H, hd), jnp.float32)
+        pool_k = _rand(ks[1], (P, page, Hkv, hd), jnp.float32)
+        pool_v = _rand(ks[2], (P, page, Hkv, hd), jnp.float32)
+        near_k = _rand(ks[3], (C * page, Hkv, hd), jnp.float32)
+        near_v = _rand(ks[4], (C * page, Hkv, hd), jnp.float32)
+        pid, walk_live, walk_len, near_live = _walk_meta(
+            ks[5], B, P, page, n_pages, C)
+        got = paged_attention(q, pool_k, pool_v, near_k, near_v, pid,
+                              walk_live, walk_len, near_live, interpret=True)
+        want = ref.paged_attention_ref(q, pool_k, pool_v, near_k, near_v,
+                                       pid, walk_live, walk_len, near_live)
+        g = np.asarray(got[0]) / np.maximum(np.asarray(got[2])[..., None],
+                                            1e-30)
+        w = np.asarray(want[0]) / np.maximum(np.asarray(want[2])[..., None],
+                                             1e-30)
+        np.testing.assert_allclose(g, w, rtol=2e-5, atol=2e-5)
+
+
+class TestPagedGatherBudget:
+    def test_pool_over_vmem_budget_raises(self):
+        """ISSUE 4 satellite: the whole-pool-in-VMEM BlockSpec must refuse
+        oversized pools with a clear error, not a silent docstring caveat."""
+        pool = jnp.zeros((8, 16, 2, 16), jnp.float32)
+        ids = jnp.zeros((1, 2), jnp.int32)
+        with pytest.raises(ValueError, match="VMEM.*budget|budget"):
+            paged_gather(pool, ids, interpret=True,
+                         vmem_budget_bytes=pool.nbytes - 1)
+
+    def test_pool_within_budget_runs(self):
+        pool = jnp.arange(8 * 16 * 2 * 16, dtype=jnp.float32
+                          ).reshape(8, 16, 2, 16)
+        ids = jnp.asarray([[3, -1]], jnp.int32)
+        got = paged_gather(pool, ids, interpret=True,
+                           vmem_budget_bytes=pool.nbytes)
+        want = ref.paged_gather_ref(pool, ids)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 class TestTieredGather:

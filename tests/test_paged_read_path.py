@@ -21,8 +21,18 @@ sharing bug shows up as an attention mismatch, not a silent alias.
 
 Driven by the seeded property harness (tests/_prop.py), so it runs without
 hypothesis.
+
+Kernel modes (ISSUE 4): the harness reads ``REPRO_KERNEL_MODE``
+(dense | gather | fused, the CI matrix legs) to route every read through
+the XLA far view, the Pallas paged-gather far view, or the fused
+page-table-walking kernel; the fused-mode classes below additionally pin
+fused == dense == monolithic on every interleaving step regardless of the
+environment.
 """
 
+import os
+
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -45,6 +55,25 @@ B = 3                        # slots
 POOL = 22                    # pool pages: B*N_PAGES + retention slack
 VOCAB = 40
 HKV, HD = 2, 8
+
+# CI kernel-mode matrix leg: route every fuzz read through this path
+KERNEL_MODE = os.environ.get("REPRO_KERNEL_MODE", "dense")
+
+_READS: dict = {}
+
+
+def _read_fn(mode: str):
+    """Jitted paged read for one kernel mode (compiled once per mode —
+    the fuzz shapes are module constants)."""
+    if mode not in _READS:
+        cfg = TieredKVConfig(page=PAGE, near_pages=3, interval=2,
+                             max_promotions=2,
+                             gather_kernel=(mode == "gather"),
+                             fused_kernel=(mode == "fused"))
+        _READS[mode] = jax.jit(
+            lambda cache, q, pos: tkv.paged_tiered_attention(cache, q, pos,
+                                                             cfg))
+    return _READS[mode]
 
 
 def _kv(pos: int, tok: int) -> np.ndarray:
@@ -73,10 +102,14 @@ def _assert_global_mapping_invariants(sop, ros):
 class PagedWorld:
     """Scheduler-shaped driver over the paged tier model (no transformer)."""
 
-    def __init__(self, seed: int, policy: str, share: bool):
+    def __init__(self, seed: int, policy: str, share: bool,
+                 kernel_mode: str | None = None):
         self.rng = np.random.default_rng(seed)
+        self.kernel_mode = KERNEL_MODE if kernel_mode is None else kernel_mode
         self.cfg = TieredKVConfig(page=PAGE, near_pages=3, interval=2,
-                                  max_promotions=2, policy=policy)
+                                  max_promotions=2, policy=policy,
+                                  gather_kernel=(self.kernel_mode == "gather"),
+                                  fused_kernel=(self.kernel_mode == "fused"))
         self.cache = tkv.init_paged_cache(self.cfg, B, N_PAGES, POOL,
                                           HKV, HD, dtype=jnp.float32)
         self.pool = PagePool(POOL)
@@ -223,17 +256,24 @@ class PagedWorld:
             if p >= 0:
                 np.testing.assert_array_equal(
                     near_k[c * PAGE:(c + 1) * PAGE], pool_k[p])
-        # (a) paged two-tier read == monolithic dense attention
+        # (a) paged two-tier read == monolithic dense attention, through
+        # the configured kernel mode; in fused mode ALSO pin fused == dense
+        # (the oracle) on the same state — promoted, unmapped and
+        # partial-last-page entries all flow through the walk metadata
         if self.active.any():
             pos = jnp.asarray(self.pos, jnp.int32)
-            got = tkv.paged_tiered_attention(self.cache, self.q, pos,
-                                             self.cfg)
+            got = _read_fn(self.kernel_mode)(self.cache, self.q, pos)
             k, v = self.dense_view()
             want_out = ref.decode_attention_ref(self.q[:, None], k, v,
                                                 pos)[:, 0]
             np.testing.assert_allclose(
                 np.asarray(got)[self.active], np.asarray(want_out)[self.active],
                 rtol=1e-5, atol=1e-5)
+            if self.kernel_mode == "fused":
+                dense = _read_fn("dense")(self.cache, self.q, pos)
+                np.testing.assert_allclose(
+                    np.asarray(got)[self.active],
+                    np.asarray(dense)[self.active], rtol=1e-5, atol=1e-5)
 
     def drain(self):
         while self.active.any():
@@ -277,6 +317,77 @@ class TestPagedInterleavings:
         assert world.total_hit_pages > 0, "trie never matched"
         assert saw_shared, "no page was ever shared by two slots"
         assert world.pool.cached.any(), "prefix cache retained nothing"
+
+
+class TestFusedKernelInterleavings:
+    """ISSUE 4 satellite: the fuzz interleavings in FUSED-kernel mode.
+
+    Every check() in fused mode asserts fused == dense == monolithic over
+    states that include promoted pages, unmapped page-table entries and
+    partial last pages (the random interleavings produce all three)."""
+
+    @given(seed=st.integers(0, 999),
+           policy=st.sampled_from(["SC", "WMC", "BBC"]),
+           share=st.booleans())
+    @settings(max_examples=4, deadline=None)
+    def test_random_interleaving_fused_equals_dense_and_monolithic(
+            self, seed, policy, share):
+        world = PagedWorld(seed, policy, share, kernel_mode="fused")
+        for _ in range(22):
+            op = world.rng.choice(OPS, p=[0.3, 0.2, 0.2, 0.2, 0.1])
+            getattr(world, op)()
+            world.check()
+        world.drain()
+
+    def test_fused_parity_at_page_boundaries(self):
+        """pos % page == 0 is the sharp edge of the partial-last-page mask:
+        the frontier page flips from 'one live row' to 'complete' to 'next
+        page, one live row'.  Decode one token at a time across two page
+        boundaries, checking fused == dense == monolithic at every step."""
+        world = PagedWorld(5, "SC", share=False, kernel_mode="fused")
+        world.admit()
+        world.migrate()          # promote something so the near pass is live
+        world.check()
+        boundaries = 0
+        while world.pos[world.active].max() < MAX_LEN - 1 and boundaries < 2:
+            world.decode()
+            if int(world.pos[world.active].max()) % PAGE == 0:
+                boundaries += 1
+                world.migrate()  # replan exactly at the boundary
+            world.check()
+        assert boundaries == 2, "never crossed two page boundaries"
+
+    def test_fused_walk_skips_promoted_and_unmapped_pages(self):
+        """The walk metadata must exclude promoted and unmapped pages —
+        the far bytes the fused path touches are live non-promoted rows
+        ONLY (the accounting the serving bench pins end-to-end)."""
+        world = PagedWorld(9, "SC", share=False, kernel_mode="fused")
+        world.admit()
+        for _ in range(3):
+            world.decode()
+            world.migrate()
+        world.check()
+        cfg = world.cfg
+        meta = tkv.paged_step_metadata(
+            world.cache, jnp.asarray(world.pos, jnp.int32), cfg)
+        sop = np.asarray(world.cache["slot_of_page"])
+        promoted_pages = {int(p) for p in np.flatnonzero(sop >= 0)}
+        assert promoted_pages, "no page promoted; test needs a near tenant"
+        for b in range(B):
+            walked = set(np.asarray(meta["walk_pid"])[b,
+                         :int(meta["walk_len"][b])].tolist())
+            assert not walked & promoted_pages, \
+                "fused walk visited a near-resident page"
+            mapped = {int(p) for p in world.pt[b] if p >= 0}
+            assert walked <= mapped, "fused walk visited an unmapped page"
+            # live non-promoted rows == the walk's row count
+            want_rows = sum(
+                min(max(int(world.pos[b]) - j * PAGE, 0), PAGE)
+                for j in range(N_PAGES)
+                if world.pt[b, j] >= 0 and int(world.pt[b, j])
+                not in promoted_pages)
+            got_rows = int(np.asarray(meta["walk_live"])[b].sum())
+            assert got_rows == want_rows
 
 
 class TestPagedReadPathPieces:

@@ -81,6 +81,32 @@ class TestServingEngineE2E:
         assert rep.outputs == base.outputs
 
 
+class TestSequentialBaselineTTFT:
+    def test_ttft_is_modeled_prefill_cost_not_zero(self):
+        """Bugfix (ISSUE 4 satellite, red test first): the baseline recorded
+        ``ttfts.append(0.0)`` while the engine's TTFT includes the modeled
+        prefill cost, so engine-vs-sequential TTFT columns compared different
+        timebases.  The baseline's first token costs exactly its prompt's
+        modeled prefill under the same CostModel."""
+        arch, params = _arch_params(seed=4)
+        rng = np.random.default_rng(5)
+        trace = _staggered_trace(arch.vocab, rng)
+        tier = TieredKVConfig(page=16, near_pages=2, interval=3)
+        cfg = ServingConfig(n_slots=3, max_len=64, prefill_bucket=16,
+                            tier=tier)
+        rep = sequential_baseline(params, arch, trace, cfg)
+        want = [cfg.cost.prefill_cost(len(r.prompt))
+                for r in sorted(trace, key=lambda r: (r.arrival, r.rid))]
+        assert rep.ttfts == pytest.approx(want), \
+            "sequential TTFT must be the modeled prefill cost, not 0.0"
+        assert rep.p50_ttft > 0
+        # the first inter-token latency of each request IS its TTFT (the
+        # engine records it the same way, so the columns share a timebase)
+        n_per = trace[0].max_new_tokens
+        firsts = rep.token_latencies[::n_per]
+        assert firsts == pytest.approx(want)
+
+
 class TestRaggedDecodePath:
     def test_vector_pos_equals_scalar_pos(self):
         """decode_step with pos broadcast to a (B,) vector reproduces the
