@@ -1,0 +1,109 @@
+"""Bench-regression gate: diff a fresh serving-bench run against the
+committed BENCH_serving.json (ISSUE 5 satellite).
+
+Fails when, for any (scenario, policy) cell present in both files:
+
+  * modeled throughput (``tok/kcost_modeled`` — the deterministic,
+    machine-independent tokens-per-cost column) regresses by more than
+    ``--tol`` (default 10%), or
+  * ``kv_bytes_live`` grows AT ALL (any memory growth is a regression:
+    the pool-native engine's whole point is that live KV tracks demand).
+
+Wall-clock tokens/s is also diffed but only *warns* by default — CI
+runners and dev machines differ by integer factors, so a wall gate would
+flap; pass ``--strict-wall`` to enforce it on a pinned machine.  The
+acceptance cells (speedup, kv_live_ratio <= 0.6, far-rows parity) are
+asserted inside ``serving_bench.run_all`` itself, so simply completing the
+fresh run re-proves them.
+
+  PYTHONPATH=src python -m benchmarks.check_bench_regression --run
+  PYTHONPATH=src python -m benchmarks.check_bench_regression \
+      --new /tmp/BENCH_serving.json            # diff two existing files
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cells(doc: dict) -> dict:
+    return {(r["scenario"], r["policy"]): r for r in doc.get("matrix", [])}
+
+
+def compare(old: dict, new: dict, tol: float = 0.10,
+            strict_wall: bool = False) -> list[str]:
+    """Returns the list of failure strings (empty == gate passes)."""
+    failures, warnings = [], []
+    old_cells, new_cells = _cells(old), _cells(new)
+    shared = sorted(set(old_cells) & set(new_cells))
+    if not shared:
+        return ["no common (scenario, policy) cells between the committed "
+                "and fresh BENCH_serving.json — header drift?"]
+    for key in shared:
+        o, n = old_cells[key], new_cells[key]
+        o_thr = float(o.get("tok/kcost_modeled", 0.0))
+        n_thr = float(n.get("tok/kcost_modeled", 0.0))
+        if o_thr > 0 and n_thr < o_thr * (1.0 - tol):
+            failures.append(
+                f"{key}: modeled throughput {n_thr:.3f} < "
+                f"{(1 - tol):.0%} of committed {o_thr:.3f}")
+        if "kv_bytes_live" in o:       # absent in pre-ISSUE-5 baselines
+            o_kv = int(o["kv_bytes_live"])
+            n_kv = int(n.get("kv_bytes_live", 0))
+            if n_kv > o_kv:
+                failures.append(
+                    f"{key}: kv_bytes_live grew {o_kv} -> {n_kv} "
+                    f"(any growth fails)")
+        o_wall = float(o.get("tok/s_wall", 0.0))
+        n_wall = float(n.get("tok/s_wall", 0.0))
+        if o_wall > 0 and n_wall < o_wall * (1.0 - tol):
+            msg = (f"{key}: wall tokens/s {n_wall:.1f} < "
+                   f"{(1 - tol):.0%} of committed {o_wall:.1f}")
+            (failures if strict_wall else warnings).append(msg)
+    for w in warnings:
+        print(f"WARN (wall clock, not gated): {w}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--old", default="BENCH_serving.json",
+                    help="committed bench file (the baseline)")
+    ap.add_argument("--new", default=None,
+                    help="fresh bench file to gate (default: produced by "
+                         "--run)")
+    ap.add_argument("--run", action="store_true",
+                    help="run serving_bench.run_all to produce the fresh "
+                         "file first")
+    ap.add_argument("--tol", type=float, default=0.10,
+                    help="fractional tokens/s regression tolerance")
+    ap.add_argument("--strict-wall", action="store_true",
+                    help="gate wall-clock tokens/s too (pinned machines)")
+    args = ap.parse_args(argv)
+
+    with open(args.old) as f:
+        old = json.load(f)
+    new_path = args.new
+    if args.run:
+        from benchmarks import serving_bench
+        new_path = new_path or "/tmp/BENCH_serving_fresh.json"
+        serving_bench.run_all(out_path=new_path)
+    if new_path is None:
+        ap.error("need --new FILE or --run")
+    with open(new_path) as f:
+        new = json.load(f)
+
+    failures = compare(old, new, tol=args.tol, strict_wall=args.strict_wall)
+    if failures:
+        for msg in failures:
+            print(f"FAIL: {msg}")
+        return 1
+    print(f"bench regression gate passed over "
+          f"{len(set(_cells(old)) & set(_cells(new)))} cells")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

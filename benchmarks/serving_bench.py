@@ -1,6 +1,6 @@
 """Serving-engine scenario suite (the serving twin of the paper's Fig 8).
 
-Four arrival scenarios x four tier policies through the continuous-batching
+Five arrival scenarios x four tier policies through the continuous-batching
 engine (`repro.serve`), reporting per cell:
 
   tokens/s (wall)       : aggregate decode throughput, post-compile.
@@ -26,9 +26,17 @@ Plus two acceptance cells:
       acceptance): emitted tokens bit-identical, and the fused path's far
       rows touched == the sum of live non-promoted page rows (device walk
       accounting == independent host shadow), never ``n_pages*page*B``.
+  pool_native : pool-as-single-source-of-truth memory (ISSUE 5
+      acceptance): peak live KV bytes (referenced pool pages + near
+      copies) <= 0.6x the dense-equivalent per-slot master on the
+      shared_system_prompt and long_context_summarize traces, with zero
+      orphaned pages (the engine's shutdown refcount sweep runs inside
+      every cell).
 
 ``run_all`` also emits **BENCH_serving.json** (tokens/s, p50/p99 latency,
-TTFT, far-rows-touched per cell) so the bench trajectory has data points.
+TTFT, far-rows-touched, live-KV-bytes per cell) so the bench trajectory
+has data points — `benchmarks/check_bench_regression.py` diffs a fresh run
+against the committed file in CI.
 
   PYTHONPATH=src python -m benchmarks.serving_bench
 """
@@ -76,6 +84,9 @@ def _traces(vocab: int):
             straggler_every=4, long_factor=4),
         "shifting_hotspot": SCENARIOS["shifting_hotspot"](
             vocab, n_requests=12, prompt_len=24, max_new_tokens=16, gap=1),
+        "long_context_summarize": SCENARIOS["long_context_summarize"](
+            vocab, n_requests=8, doc_len=96, question_len=16,
+            max_new_tokens=16, gap=2),
     }
 
 
@@ -204,11 +215,55 @@ def bench_prefix_sharing(arch_name="qwen3-1.7b", policy="BBC"):
     ]
 
 
+def bench_pool_native(arch_name="qwen3-1.7b", policy="BBC"):
+    """ISSUE 5 acceptance cell: with the pool as the single source of truth
+    (no dense per-slot KV master anywhere in the engine), peak live KV
+    bytes — referenced pool pages + near-tier copies, all layers, K and V —
+    must be <= 0.6x the dense-equivalent master's fixed footprint on the
+    two sharing-heavy traces.  Zero orphaned pages is asserted by the
+    engine's shutdown refcount sweep inside every run."""
+    arch, params = _setup(arch_name)
+    # shared-system-prompt: many tenants of one prompt prefix
+    ssp = SCENARIOS["shared_system_prompt"](
+        arch.vocab, n_requests=12, sys_len=64, user_len=16,
+        max_new_tokens=16, gap=2)
+    eng = ServingEngine(params, arch, _config(policy, share=True))
+    eng.run(ssp, "warmup")
+    rep = eng.run(ssp, "shared_system_prompt")
+    # long-context summarize: few slots, one very long shared document
+    lcs = SCENARIOS["long_context_summarize"](
+        arch.vocab, n_requests=6, doc_len=192, question_len=16,
+        max_new_tokens=8, gap=4)
+    tier = TieredKVConfig(page=16, near_pages=2, interval=4, policy=policy)
+    lcs_cfg = ServingConfig(n_slots=4, max_len=256, prefill_bucket=16,
+                            tier=tier, share_prefix=True)
+    lcs_eng = ServingEngine(params, arch, lcs_cfg)
+    lcs_eng.run(lcs, "warmup")
+    lcs_rep = lcs_eng.run(lcs, "long_context_summarize")
+    for r in (rep, lcs_rep):
+        assert r.kv_live_ratio <= 0.6, \
+            f"{r.scenario}: live KV {r.kv_live_ratio:.3f}x dense (> 0.6)"
+    return [
+        ("pool_native", "ssp_kv_bytes_live", rep.kv_bytes_live),
+        ("pool_native", "ssp_kv_bytes_dense_equiv",
+         rep.kv_bytes_dense_equiv),
+        ("pool_native", "ssp_kv_live_ratio", round(rep.kv_live_ratio, 3)),
+        ("pool_native", "lcs_kv_bytes_live", lcs_rep.kv_bytes_live),
+        ("pool_native", "lcs_kv_bytes_dense_equiv",
+         lcs_rep.kv_bytes_dense_equiv),
+        ("pool_native", "lcs_kv_live_ratio",
+         round(lcs_rep.kv_live_ratio, 3)),
+        ("pool_native", "lcs_prefill_saved_frac",
+         round(lcs_rep.prefill_saved_frac, 3)),
+    ]
+
+
 def run_all(out_path: str | None = "BENCH_serving.json"):
     rows = [ServingReport.HEADER] + bench_scenarios()
     rows += bench_continuous_vs_sequential()
     rows += bench_prefix_sharing()
     rows += bench_fused_kernel()
+    rows += bench_pool_native()
     for r in rows:
         print(",".join(str(x) for x in r))
     if out_path:

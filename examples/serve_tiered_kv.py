@@ -77,6 +77,9 @@ def main():
           f"{rep_on.p50_ttft:.0f}")
     print("outputs identical with sharing on:",
           rep_off.outputs == rep_on.outputs)
+    print(f"peak live KV (pool is the only store): "
+          f"{rep_on.kv_bytes_live} bytes = "
+          f"{rep_on.kv_live_ratio:.2f}x the dense-equivalent master")
 
     # -- fused page-table-walking read path (ISSUE 4) -----------------------
     fused_tier = TieredKVConfig(page=16, near_pages=2, interval=4,

@@ -411,6 +411,14 @@ def preload_static_kv(cache: dict, profile_masses: jax.Array,
 # the paper's one-IST-many-accesses economics made literal.  Page-table
 # dead-entry handling follows the shared-engine sentinel idiom: -1 entries
 # route through clamped gathers and are masked from every read.
+#
+# Since ISSUE 5 the pool is the serving stack's SINGLE SOURCE OF TRUTH
+# (docs/design.md §2f): prefill and decode write pool pages directly, no
+# dense per-slot master exists, and the near buffers are derived copies
+# re-gathered from the pool on mapping changes (`refresh_near_from_pool`).
+# The functions below therefore accept either the buffer-carrying dict of
+# `init_paged_cache` (the single-layer model object the fuzz suite drives)
+# or the mapping-only `init_tier_state` dict plus explicit buffers.
 # ===========================================================================
 
 
@@ -479,25 +487,38 @@ class PagePool:
         return freed
 
 
+def init_tier_state(n_slots: int, n_pages: int, pool_pages: int,
+                    near_pages: int) -> dict:
+    """Mapping-only paged tier state: page tables, the global near mapping
+    and the policy scores — WITHOUT pool or near buffers.  The serving
+    engine owns those separately (per layer) since the ownership inversion
+    (ISSUE 5); every ``paged_*`` function accepts this dict plus explicit
+    buffers, or the full buffer-carrying dict of ``init_paged_cache`` (the
+    single-layer model object the fuzz suite drives)."""
+    return {
+        "page_table": -jnp.ones((n_slots, n_pages), jnp.int32),
+        "slot_of_page": -jnp.ones((pool_pages,), jnp.int32),
+        "page_of_slot": -jnp.ones((near_pages,), jnp.int32),
+        "scores": jnp.zeros((pool_pages,), jnp.float32),
+        "last_use": jnp.zeros((pool_pages,), jnp.float32),
+        "step": jnp.zeros((), jnp.int32),
+        "migrations": jnp.zeros((), jnp.int32),
+    }
+
+
 def init_paged_cache(cfg: TieredKVConfig, n_slots: int, n_pages: int,
                      pool_pages: int, n_kv_heads: int, head_dim: int,
                      dtype=jnp.bfloat16) -> dict:
     """Device state for the paged far tier + global near tier."""
     C = cfg.near_pages
     return {
+        **init_tier_state(n_slots, n_pages, pool_pages, C),
         "pool_k": jnp.zeros((pool_pages, cfg.page, n_kv_heads, head_dim),
                             dtype),
         "pool_v": jnp.zeros((pool_pages, cfg.page, n_kv_heads, head_dim),
                             dtype),
-        "page_table": -jnp.ones((n_slots, n_pages), jnp.int32),
         "near_k": jnp.zeros((C * cfg.page, n_kv_heads, head_dim), dtype),
         "near_v": jnp.zeros((C * cfg.page, n_kv_heads, head_dim), dtype),
-        "slot_of_page": -jnp.ones((pool_pages,), jnp.int32),
-        "page_of_slot": -jnp.ones((C,), jnp.int32),
-        "scores": jnp.zeros((pool_pages,), jnp.float32),
-        "last_use": jnp.zeros((pool_pages,), jnp.float32),
-        "step": jnp.zeros((), jnp.int32),
-        "migrations": jnp.zeros((), jnp.int32),
     }
 
 
@@ -548,9 +569,28 @@ def paged_far_view(cache: dict, cfg: TieredKVConfig):
     return far_k, far_v
 
 
+def _front_pack_walk(visit: jax.Array, arrays: dict) -> dict:
+    """Front-pack per-slot page walks in page order: for each (B, n_pages)
+    array in ``arrays``, keep entries where ``visit`` holds, packed to the
+    front (stable — non-visited entries key past the end and come out as
+    the array's masked-fill value).  Shared by the READ walk
+    (``paged_step_metadata``: mapped & ~promoted & live) and the SCORE walk
+    (``paged_score_walk``: mapped & live) so the packing contract the
+    kernels rely on cannot desynchronize between them.  Adds ``"len"``:
+    (B,) i32 visited count."""
+    B, n_pages = visit.shape
+    j = jnp.arange(n_pages)
+    order = jnp.argsort(jnp.where(visit, j[None, :], n_pages), axis=1)
+    out = {k: jnp.take_along_axis(v, order, axis=1).astype(jnp.int32)
+           for k, v in arrays.items()}
+    out["len"] = visit.sum(axis=1).astype(jnp.int32)
+    return out
+
+
 def paged_step_metadata(cache: dict, lengths: jax.Array,
                         cfg: TieredKVConfig,
-                        append_pos: jax.Array | None = None) -> dict:
+                        append_pos: jax.Array | None = None,
+                        pool_pages: int | None = None) -> dict:
     """Per-decode-step read-path metadata — small int arrays computed ONCE
     per step from ``(page_table, slot_of_page, page_of_slot, lengths)`` and
     shared by every layer's read (fused kernel inputs AND the dense oracle's
@@ -573,14 +613,22 @@ def paged_step_metadata(cache: dict, lengths: jax.Array,
       near_live (B, C) i32       : live rows this sequence reads from near
                                    slot c (0 masks the panel)
       mapped / promoted (B, n_pages) bool : the underlying page states
+      pt        (B, n_pages) i32  : the raw page table (the dense
+                                   pool-native read path materializes its
+                                   per-layer far view from it)
       append_pid/append_off (B,) i32 (only with ``append_pos``): the pool
         page + in-page offset the step's new token writes through the page
         table (sentinel P for unmapped/out-of-range — ``mode="drop"``).
+
+    ``cache`` may be a mapping-only tier-state dict (no pool buffers) —
+    pass ``pool_pages`` explicitly then (the serving engine owns the pool
+    buffers separately since the ownership inversion, ISSUE 5).
     """
     pt = cache["page_table"]
     B, n_pages = pt.shape
     page = cfg.page
-    P = cache["pool_k"].shape[0]
+    P = cache["pool_k"].shape[0] if "pool_k" in cache else pool_pages
+    assert P is not None, "need pool_k in cache or an explicit pool_pages"
     C = cache["page_of_slot"].shape[0]
     lengths = _pos_vec(lengths, B)
 
@@ -590,13 +638,9 @@ def paged_step_metadata(cache: dict, lengths: jax.Array,
     j = jnp.arange(n_pages)
     page_live = jnp.clip(lengths[:, None] - j[None, :] * page, 0, page)
     visit = mapped & ~promoted & (page_live > 0)
-
-    # front-pack the walk in page order (stable: non-visited keyed past end)
-    order = jnp.argsort(jnp.where(visit, j[None, :], n_pages), axis=1)
-    walk_pid = jnp.take_along_axis(jnp.where(visit, pt, 0), order, axis=1)
-    walk_live = jnp.take_along_axis(jnp.where(visit, page_live, 0), order,
-                                    axis=1)
-    walk_len = visit.sum(axis=1).astype(jnp.int32)
+    walk = _front_pack_walk(visit, {"pid": jnp.where(visit, pt, 0),
+                                    "live": jnp.where(visit, page_live, 0)})
+    walk_pid, walk_live, walk_len = walk["pid"], walk["live"], walk["len"]
 
     # near tenancy by SCATTER (j_of[b, near_slot_of(b,j)] = j), not by the
     # (B, n_pages, C) equality tensor the per-layer path used to rebuild
@@ -612,7 +656,8 @@ def paged_step_metadata(cache: dict, lengths: jax.Array,
             "walk_live": walk_live.astype(jnp.int32),
             "walk_len": walk_len,
             "j_of": j_of, "near_live": near_live.astype(jnp.int32),
-            "mapped": mapped, "promoted": promoted}
+            "mapped": mapped, "promoted": promoted,
+            "pt": pt.astype(jnp.int32)}
     if append_pos is not None:
         append_pos = _pos_vec(append_pos, B)
         ja = append_pos // page
@@ -682,17 +727,60 @@ def paged_tiered_attention(cache: dict, q: jax.Array, pos: jax.Array,
     return ref.merge_attention_stats([stats_n, stats_f])
 
 
+def paged_score_walk(cache: dict, pos: jax.Array,
+                     cfg: TieredKVConfig) -> dict:
+    """SCORE walk list: every mapped page with live rows, front-packed in
+    page order — near-resident pages INCLUDED (retention scores must stay
+    fresh), which is what distinguishes it from the read walk
+    (``paged_step_metadata``, which skips promoted pages).
+
+    Returns score_pid/score_live/score_j (B, n_pages) i32 and score_len
+    (B,) i32; ``score_j`` is each entry's slot-page index (sentinel
+    n_pages past score_len) so callers can scatter per-entry masses back
+    to (B, n_pages) positions."""
+    pt = cache["page_table"]
+    B, n_pages = pt.shape
+    page = cfg.page
+    pos_b = _pos_vec(pos, B)
+    j = jnp.arange(n_pages)
+    page_live = jnp.clip(pos_b[:, None] - j[None, :] * page, 0, page)
+    visit = (pt >= 0) & (page_live > 0)
+    walk = _front_pack_walk(
+        visit, {"pid": jnp.where(visit, pt, 0),
+                "live": jnp.where(visit, page_live, 0),
+                "j": jnp.where(visit, jnp.broadcast_to(j[None, :],
+                                                       (B, n_pages)),
+                               n_pages)})
+    return {"score_pid": walk["pid"], "score_live": walk["live"],
+            "score_j": walk["j"], "score_len": walk["len"]}
+
+
 def paged_page_masses(q: jax.Array, cache: dict, pos: jax.Array,
                       cfg: TieredKVConfig) -> jax.Array:
     """Per-slot per-page attention mass over the paged far pool.
 
     Returns (B, n_pages) f32 — near-resident pages included (scores stay
     fresh), unmapped pages zero.  The *aggregate* pool-page mass that drives
-    planning is derived by ``aggregate_pool_masses``."""
+    planning is derived by ``aggregate_pool_masses``.
+
+    ``cfg.fused_kernel``: score through the pool-native page-mass reduction
+    kernel (`kernels.paged_masses`) — walks the page table like the fused
+    read, touching only live mapped K pages, with NO far-view
+    materialization.  Default: the XLA materializing path (the oracle)."""
     B, H, _ = q.shape
     pt = cache["page_table"]
     n_pages = pt.shape[1]
     page = cfg.page
+    if cfg.fused_kernel:
+        from repro.kernels.paged_masses import paged_masses
+        walk = paged_score_walk(cache, pos, cfg)
+        interpret = jax.default_backend() == "cpu"
+        mass = paged_masses(q, cache["pool_k"], walk["score_pid"],
+                            walk["score_live"], walk["score_len"],
+                            interpret=interpret)                  # (B, W)
+        out = jnp.zeros((B, n_pages), jnp.float32).at[
+            jnp.arange(B)[:, None], walk["score_j"]].add(mass, mode="drop")
+        return out / max(H, 1)
     far_k, _ = paged_far_view(cache, cfg)
     T = far_k.shape[1]
     live = ((jnp.arange(T)[None, :] < _pos_vec(pos, B)[:, None])
@@ -758,7 +846,11 @@ def paged_plan_and_migrate(cache: dict, q: jax.Array, pos: jax.Array,
 def paged_pin_pages(cache: dict, pages, slots, cfg: TieredKVConfig) -> dict:
     """STATIC placement on the pool: map the given pool pages into the given
     (free) near slots and copy their contents in.  ``pages``/``slots`` are
-    host lists — the engine's per-slot first-interval pinning pass."""
+    host lists — the engine's per-slot first-interval pinning pass.
+
+    A mapping-only tier-state dict (no pool/near buffers) updates just the
+    mapping; the caller re-derives its near buffers from the pool
+    (``refresh_near_from_pool``) — the pool-native engine path."""
     if not len(pages):
         return cache
     cache = dict(cache)
@@ -767,9 +859,10 @@ def paged_pin_pages(cache: dict, pages, slots, cfg: TieredKVConfig) -> dict:
     valid = jnp.ones((len(pages),), bool)
     cache["slot_of_page"] = cache["slot_of_page"].at[pages_a].set(slots_a)
     cache["page_of_slot"] = cache["page_of_slot"].at[slots_a].set(pages_a)
-    cache["near_k"], cache["near_v"] = _copy_pool_pages(
-        cache["near_k"], cache["near_v"], cache["pool_k"], cache["pool_v"],
-        pages_a, slots_a, valid, cfg.page)
+    if "pool_k" in cache:
+        cache["near_k"], cache["near_v"] = _copy_pool_pages(
+            cache["near_k"], cache["near_v"], cache["pool_k"],
+            cache["pool_v"], pages_a, slots_a, valid, cfg.page)
     return cache
 
 
@@ -780,7 +873,10 @@ def paged_release_pages(cache: dict, pages, cfg: TieredKVConfig) -> dict:
     remain a prefix (the invariant every read depends on).
 
     Host-side (numpy mapping surgery + one device reorder of the near
-    buffers); runs at admission/retirement boundaries, never per step."""
+    buffers); runs at admission/retirement boundaries, never per step.  A
+    mapping-only tier-state dict (no near buffers) gets the surgery alone;
+    the caller re-derives its near buffers from the pool
+    (``refresh_near_from_pool``) — the pool-native engine path."""
     pages = [int(p) for p in pages]
     if not pages:
         return cache
@@ -804,11 +900,12 @@ def paged_release_pages(cache: dict, pages, cfg: TieredKVConfig) -> dict:
             perm[i] = c
             new_ros[i] = ros[c]
             new_sop[ros[c]] = i
-        shape = cache["near_k"].shape
-        nk = cache["near_k"].reshape(C, page, *shape[1:])
-        nv = cache["near_v"].reshape(C, page, *shape[1:])
-        cache["near_k"] = jnp.take(nk, perm, axis=0).reshape(shape)
-        cache["near_v"] = jnp.take(nv, perm, axis=0).reshape(shape)
+        if "near_k" in cache:
+            shape = cache["near_k"].shape
+            nk = cache["near_k"].reshape(C, page, *shape[1:])
+            nv = cache["near_v"].reshape(C, page, *shape[1:])
+            cache["near_k"] = jnp.take(nk, perm, axis=0).reshape(shape)
+            cache["near_v"] = jnp.take(nv, perm, axis=0).reshape(shape)
         sop, ros = new_sop, new_ros
     sop[pages] = -1
     cache["scores"] = jnp.asarray(scores)
@@ -818,24 +915,24 @@ def paged_release_pages(cache: dict, pages, cfg: TieredKVConfig) -> dict:
     return cache
 
 
-def refresh_pool_from_slots(cache: dict, k_rows: jax.Array,
-                            v_rows: jax.Array,
-                            cfg: TieredKVConfig) -> dict:
-    """Scatter each slot's dense cache rows into its mapped pool pages.
+def refresh_near_from_pool(pool_k: jax.Array, pool_v: jax.Array,
+                           page_of_slot: jax.Array):
+    """Re-derive near-tier buffers from the pool under the current global
+    near mapping — the pool-native near refresh (the pool IS the master
+    copy, so a full re-gather is equivalent to incremental page copies).
 
-    The serving engine's decode step appends K/V to the dense per-slot
-    cache (the exact read path); before each planning pass this one jittable
-    scatter brings the pool master copies up to date.  Pages mapped by
-    several slots receive identical content (shared prefixes are immutable,
-    decode pages are private), so duplicate scatter writes are benign;
-    unmapped (prefix-index-retained) pages keep their frozen content."""
-    cache = dict(cache)
-    pt = cache["page_table"]
-    B, n_pages = pt.shape
-    P, page, Hkv, hd = cache["pool_k"].shape
-    rows_k = k_rows.reshape(B * n_pages, page, Hkv, hd)
-    rows_v = v_rows.reshape(B * n_pages, page, Hkv, hd)
-    pid = jnp.where(pt >= 0, pt, P).ravel()
-    cache["pool_k"] = cache["pool_k"].at[pid].set(rows_k, mode="drop")
-    cache["pool_v"] = cache["pool_v"].at[pid].set(rows_v, mode="drop")
-    return cache
+    pool_k/pool_v: (..., P, page, Hkv, hd) — a leading layer axis is
+    supported (the serving engine keeps per-layer pools).  Returns
+    (near_k, near_v) of shape (..., C*page, Hkv, hd); unoccupied near
+    slots come out zeroed.  Runs only when the mapping changes
+    (plan / pin / release / admit / retire), never per decode step."""
+    safe = jnp.maximum(page_of_slot, 0)
+    occ = page_of_slot >= 0
+    nk = jnp.take(pool_k, safe, axis=-4)
+    nv = jnp.take(pool_v, safe, axis=-4)
+    occ_b = occ[(...,) + (None,) * 3]
+    nk = jnp.where(occ_b, nk, 0)
+    nv = jnp.where(occ_b, nv, 0)
+    *lead, C, page, Hkv, hd = nk.shape
+    shape = (*lead, C * page, Hkv, hd)
+    return nk.reshape(shape), nv.reshape(shape)

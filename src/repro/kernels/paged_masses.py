@@ -1,0 +1,139 @@
+"""Pallas kernel: pool-native per-page attention-mass reduction.
+
+The scoring pass (the paper's interval-sampled activation counts) used to
+materialize every slot's full far view — the exact gather the fused decode
+kernel (`kernels.paged_attention`) eliminated from the read path — just to
+softmax it and sum per page.  With the pool as the single source of truth
+(ISSUE 5) scoring walks the page table the same way the read does:
+
+  grid (B, Hkv); per step the kernel walks the slot's SCORE walk list
+  (ALL mapped, live pages — near-resident pages included, so retention
+  scores stay fresh; contrast the read walk, which skips promoted pages),
+  issuing ONE async pool->VMEM copy per page and accumulating an
+  online-softmax numerator PER WALK ENTRY (a (g, W) accumulator rescaled
+  by the running max), so the per-page probability masses come out of one
+  pass with no (B, T) score tensor and no far-view materialization.
+
+Only ``pool_k`` is touched — masses need scores, not values — so the
+scoring pass moves half the bytes of even a hypothetical fused read over
+the same pages.
+
+Returns (B, W) f32: per walk entry, the attention mass summed over ALL
+query heads (callers divide by H and scatter entries back to slot-page
+positions via the walk's ``score_j``).  ``paged_masses_ref`` is the
+pure-jnp oracle the kernel is validated against.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_masses_kernel(h_ref, pid_ref, live_ref, len_ref, q_ref,
+                         pool_k_ref, o_ref, kbuf, sem_k, *,
+                         page: int, n_walk: int, scale: float):
+    h = h_ref[0]                       # this grid step's KV head (SMEM iota)
+    q = q_ref[0, 0].astype(jnp.float32) * scale               # (g, hd)
+    g, hd = q.shape
+    row = jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+
+    def body(i, carry):
+        psum, m, l = carry
+        pid = pid_ref[0, i]
+        cp = pltpu.make_async_copy(pool_k_ref.at[pid, :, h], kbuf, sem_k)
+        cp.start()
+        cp.wait()
+        kp = kbuf[...].astype(jnp.float32)                    # (page, hd)
+        s = jax.lax.dot_general(q, kp, (((1,), (1,)), ((), ())))
+        alive = row < live_ref[0, i]
+        s = jnp.where(alive, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(alive, jnp.exp(s - m_new), 0.0)
+        l_new = l * alpha + p.sum(axis=1, keepdims=True)
+        # rescale every prior entry's numerator, then deposit this one's
+        psum_new = jax.lax.dynamic_update_slice(
+            psum * alpha, p.sum(axis=1, keepdims=True), (0, i))
+        return psum_new, m_new, l_new
+
+    psum = jnp.zeros((g, n_walk), jnp.float32)
+    m = jnp.full((g, 1), NEG_INF, jnp.float32)
+    l = jnp.zeros((g, 1), jnp.float32)
+    psum, m, l = jax.lax.fori_loop(0, len_ref[0], body, (psum, m, l))
+    o_ref[0, 0] = (psum / jnp.maximum(l, 1e-30)).sum(axis=0)
+
+
+def paged_masses(q: jax.Array, pool_k: jax.Array, score_pid: jax.Array,
+                 score_live: jax.Array, score_len: jax.Array,
+                 interpret: bool = False) -> jax.Array:
+    """Pool-native per-page attention masses.
+
+    q: (B, H, hd) scoring queries (GQA: H a multiple of Hkv).
+    pool_k: (P, page, Hkv, hd) shared far pool (stays in HBM/ANY).
+    score_pid/score_live: (B, W) int32 — per slot, the pool ids of its
+      mapped LIVE pages (front-packed, near-resident included) and each
+      page's live row count; entries past ``score_len[b]`` unused.
+    score_len: (B,) int32.
+
+    Returns (B, W) f32: per walk entry, softmax attention mass summed over
+    all H heads (entries past score_len are exactly zero)."""
+    B, H, hd = q.shape
+    P, page, Hkv, _ = pool_k.shape
+    g = H // Hkv
+    W = score_pid.shape[1]
+    q4 = q.reshape(B, Hkv, g, hd)
+    heads = jnp.arange(Hkv, dtype=jnp.int32)
+    i32 = functools.partial(jnp.asarray, dtype=jnp.int32)
+
+    kernel = functools.partial(_paged_masses_kernel, page=page, n_walk=W,
+                               scale=hd ** -0.5)
+    smem = functools.partial(pl.BlockSpec, memory_space=pltpu.SMEM)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv),
+        in_specs=[
+            smem((1,), lambda b, h: (h,)),
+            smem((1, W), lambda b, h: (b, 0)),
+            smem((1, W), lambda b, h: (b, 0)),
+            smem((1,), lambda b, h: (b,)),
+            pl.BlockSpec((1, 1, g, hd), lambda b, h: (b, h, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+        ],
+        out_specs=pl.BlockSpec((1, 1, W), lambda b, h: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, W), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((page, hd), pool_k.dtype),
+            pltpu.SemaphoreType.DMA,
+        ],
+        interpret=interpret,
+    )(heads, i32(score_pid), i32(score_live), i32(score_len), q4, pool_k)
+    return out.sum(axis=1)
+
+
+def paged_masses_ref(q: jax.Array, pool_k: jax.Array, score_pid: jax.Array,
+                     score_live: jax.Array,
+                     score_len: jax.Array) -> jax.Array:
+    """Materializing oracle: gather the walked pages, softmax, page-sum."""
+    B, H, hd = q.shape
+    P, page, Hkv, _ = pool_k.shape
+    g = H // Hkv
+    W = score_pid.shape[1]
+    k = pool_k[score_pid]                         # (B, W, page, Hkv, hd)
+    qh = q.reshape(B, Hkv, g, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgd,bwpkd->bkgwp", qh, k.astype(jnp.float32))
+    walk_ok = (jnp.arange(W)[None, :] < score_len[:, None])   # (B, W)
+    alive = walk_ok[:, None, None, :, None] & \
+        (jnp.arange(page)[None, None, None, None, :]
+         < score_live[:, None, None, :, None])
+    s = jnp.where(alive, s, NEG_INF)
+    flat = s.reshape(B, Hkv, g, W * page)
+    p = jax.nn.softmax(flat, axis=-1).reshape(s.shape)
+    p = jnp.where(alive, p, 0.0)
+    return p.sum(axis=(1, 2, 4))                  # (B, W)

@@ -21,19 +21,6 @@ def make_prefill_step(arch: ArchConfig, max_len: int):
     return prefill_step
 
 
-def make_suffix_prefill_step(arch: ArchConfig, max_len: int):
-    """Prefix-chunked prefill step for the prefix-sharing admission path:
-    ``batch`` carries only the prompt *suffix* (with absolute positions);
-    ``k_pre``/``v_pre`` are the shared prefix's K/V pages gathered from the
-    far pool ((L, B, T_pre, Hkv, hd)).  Returns suffix logits and a cache
-    whose rows are bit-identical to a full prefill of prefix+suffix — the
-    property the serving engine's token-parity acceptance rests on."""
-    def prefill_step(params, batch, k_pre, v_pre):
-        return transformer.prefill(params, batch, arch, max_len=max_len,
-                                   prefix_kv=(k_pre, v_pre))
-    return prefill_step
-
-
 def make_decode_step(arch: ArchConfig):
     def decode_step(params, cache, batch):
         return transformer.decode_step(params, cache, batch, arch)
@@ -41,20 +28,74 @@ def make_decode_step(arch: ArchConfig):
 
 
 def make_paged_tiered_decode_step(arch: ArchConfig, tier_cfg: TieredKVConfig):
-    """Fused paged tiered decode step (ISSUE 4): every layer reads through
-    the page-table-walking Pallas kernel over the per-layer shared page pool
-    + per-layer global near buffer — no far-view materialization on the hot
-    path.  ``cache`` carries the extra pool/near leaves (see
-    ``transformer.paged_decode_step``); ``meta`` is the per-step read
-    metadata (`core.tiered_kv.paged_step_metadata`), computed ONCE per
-    decode step by the serving engine and shared by every layer.  Returns
-    (logits, new_cache, aux) with the layer-0 scoring query in ``aux``."""
-    del tier_cfg  # geometry rides in the cache leaves + meta shapes
+    """Paged tiered decode step over the pool-as-single-source-of-truth
+    cache (ISSUE 5).  With ``tier_cfg.fused_kernel`` every layer reads
+    through the page-table-walking Pallas kernel over the per-layer shared
+    page pool + per-layer global near buffer — no far-view materialization
+    on the hot path; without it, each layer materializes its far view from
+    the SAME pool and runs the PR-4 dense reduction (bit-identical logits
+    to the retired dense-master path).  ``cache`` carries the pool/near
+    leaves (see ``transformer.paged_decode_step``); ``meta`` is the
+    per-step read metadata (`core.tiered_kv.paged_step_metadata`), computed
+    ONCE per decode step by the serving engine and shared by every layer.
+    Returns (logits, new_cache, aux) with the layer-0 scoring query in
+    ``aux``."""
+    fused = bool(tier_cfg.fused_kernel)
 
     def decode_step(params, cache, batch, meta):
         return transformer.paged_decode_step(params, cache, batch, arch,
-                                             meta, want_aux=True)
+                                             meta, want_aux=True,
+                                             fused=fused)
     return decode_step
+
+
+def _scatter_prompt_pages(pool_k, pool_v, k_rows, v_rows, ids, page: int):
+    """Scatter a prefilled sequence's K/V rows into full-layer pool pages.
+
+    pool_k/pool_v: (L, P, page, Hkv, hd); k_rows/v_rows: (L, T, Hkv, hd);
+    ids: (n_pages,) pool id per prompt page, -1 entries dropped (already
+    written shared-prefix pages, and pages past the request's range)."""
+    L, T, Hkv, hd = k_rows.shape
+    n = ids.shape[0]
+    P = pool_k.shape[1]
+    safe = jnp.where(ids >= 0, ids, P)
+    rk = k_rows.reshape(L, n, page, Hkv, hd)
+    rv = v_rows.reshape(L, n, page, Hkv, hd)
+    return (pool_k.at[:, safe].set(rk, mode="drop"),
+            pool_v.at[:, safe].set(rv, mode="drop"))
+
+
+def make_pool_prefill_step(arch: ArchConfig, max_len: int, page: int):
+    """Prefill straight into allocated pool pages (ISSUE 5): one jitted
+    program runs ``transformer.prefill`` and scatters the resulting cache
+    rows into the per-layer page pool — the dense rows exist only as a
+    transient inside the step; the pool is the only store that survives.
+    Returns (logits, pool_k, pool_v)."""
+    def prefill_step(params, batch, pool_k, pool_v, ids):
+        logits, pcache = transformer.prefill(params, batch, arch,
+                                             max_len=max_len)
+        pool_k, pool_v = _scatter_prompt_pages(
+            pool_k, pool_v, pcache["k"][:, 0], pcache["v"][:, 0], ids, page)
+        return logits, pool_k, pool_v
+    return prefill_step
+
+
+def make_pool_suffix_prefill_step(arch: ArchConfig, max_len: int, page: int):
+    """Prefix-chunked variant of ``make_pool_prefill_step`` for the
+    prefix-sharing admission path: ``batch`` carries only the prompt
+    *suffix* (with absolute positions); ``k_pre``/``v_pre`` are the shared
+    prefix's K/V pages gathered from the pool ((L, B, T_pre, Hkv, hd)).
+    The returned cache rows are bit-identical to a full prefill of
+    prefix+suffix (the token-parity property), and land straight in the
+    pool."""
+    def prefill_step(params, batch, k_pre, v_pre, pool_k, pool_v, ids):
+        logits, pcache = transformer.prefill(params, batch, arch,
+                                             max_len=max_len,
+                                             prefix_kv=(k_pre, v_pre))
+        pool_k, pool_v = _scatter_prompt_pages(
+            pool_k, pool_v, pcache["k"][:, 0], pcache["v"][:, 0], ids, page)
+        return logits, pool_k, pool_v
+    return prefill_step
 
 
 def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,

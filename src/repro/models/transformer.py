@@ -490,40 +490,47 @@ def decode_step(params: Params, cache: Cache, batch: dict, arch: ArchConfig,
 
 def paged_decode_step(params: Params, cache: Cache, batch: dict,
                       arch: ArchConfig, meta: dict,
-                      compute_dtype=jnp.bfloat16, want_aux: bool = False):
-    """One decode step read through the FUSED paged tier (ISSUE 4 tentpole).
+                      compute_dtype=jnp.bfloat16, want_aux: bool = False,
+                      fused: bool = True):
+    """One decode step over the paged tier — the pool is the ONLY KV store.
 
     Identical math to ``decode_step`` — every layer attends its slot's full
-    live prefix — but the read path is the page-table-walking kernel
-    (`kernels.paged_attention`) over the per-layer shared page pool plus the
-    per-layer global near buffer, instead of dense attention over a
-    materialized per-slot cache.  Per layer and per step this touches only
-    each slot's live, non-promoted far pages.
+    live prefix — but the per-layer shared page pool is the single source
+    of truth (ISSUE 5): the new token's K/V is written through the page
+    table into the pool (``append_pid``/``append_off``; sentinel drops) and
+    NOWHERE else — the dense per-slot master rows of the PR-4 path are
+    gone.  Two read paths over the same pool bytes:
 
-    ``cache`` carries, besides the usual ``k``/``v``/``pos`` leaves (the
-    dense rows remain the master copy the oracle and the scoring pass read):
+      fused=True  : the page-table-walking kernel (`kernels.paged_attention`)
+                    over pool + per-layer global near buffer — touches only
+                    each slot's live, non-promoted far pages.
+      fused=False : materialize the slot's far view from the pool per layer
+                    and run the same ``decode_attention`` reduction the
+                    PR-4 dense-master path ran — bit-identical logits to
+                    it, since the pool holds bit-identical bytes (the
+                    oracle leg of the fused-vs-dense token-parity pin).
+
+    ``cache`` carries:
 
       pool_k/pool_v : (L, P, page, Hkv, hd)  per-layer shared far pool
       near_k/near_v : (L, C*page, Hkv, hd)   per-layer global near buffer
+                                             (read only by the fused path)
 
-    ``meta`` is ``core.tiered_kv.paged_step_metadata(paged, pos + 1,
+    ``meta`` is ``core.tiered_kv.paged_step_metadata(state, pos + 1,
     cfg, append_pos=pos)`` — computed ONCE per step by the engine and shared
     by every layer (lengths = pos + 1 so the token appended this step is
-    attended, matching ``decode_attention``'s ``slot <= pos`` mask).  The
-    new token's K/V is written through the page table into the pool
-    (``append_pid``/``append_off``; sentinel drops) AND into the dense rows.
+    attended, matching ``decode_attention``'s ``slot <= pos`` mask).
 
     Returns (logits, new_cache[, aux]) like ``decode_step``.
     """
     assert arch.n_heads and arch.ssm is None and not arch.sliding_window, \
-        "fused paged decode requires a plain-attention architecture"
+        "paged decode requires a plain-attention architecture"
     x = _embed_inputs(params, batch, arch).astype(compute_dtype)
     x = ctx.constrain(x, ctx.BATCH, ctx.SEQ, None)
     pos = cache["pos"]
     if jnp.asarray(pos).ndim == 0:
         pos = jnp.broadcast_to(pos, (x.shape[0],))
     B = x.shape[0]
-    b_idx = jnp.arange(B)
 
     cparams = jax.tree.map(
         lambda a: a.astype(compute_dtype)
@@ -538,19 +545,23 @@ def paged_decode_step(params: Params, cache: Cache, batch: dict,
         layer_params, cl, nk, nv = scanned
 
         def kv_hook(q, k, v, cl2):
-            T = cl2["k"].shape[1]
-            slot = jnp.minimum(pos, T - 1)
-            k_cache = cl2["k"].at[b_idx, slot].set(k[:, 0])
-            v_cache = cl2["v"].at[b_idx, slot].set(v[:, 0])
             pool_k = cl2["pool_k"].at[meta["append_pid"],
                                       meta["append_off"]].set(k[:, 0],
                                                               mode="drop")
             pool_v = cl2["pool_v"].at[meta["append_pid"],
                                       meta["append_off"]].set(v[:, 0],
                                                               mode="drop")
-            out = paged_decode_attention(q, pool_k, pool_v, nk, nv, meta)
-            return out, dict(k=k_cache, v=v_cache, pool_k=pool_k,
-                             pool_v=pool_v)
+            if fused:
+                out = paged_decode_attention(q, pool_k, pool_v, nk, nv,
+                                             meta)
+            else:
+                n_pages = meta["pt"].shape[1]
+                safe = jnp.maximum(meta["pt"], 0)
+                _, page, Hkv, hd = pool_k.shape
+                k_view = pool_k[safe].reshape(B, n_pages * page, Hkv, hd)
+                v_view = pool_v[safe].reshape(B, n_pages * page, Hkv, hd)
+                out = decode_attention(q, k_view, v_view, pos)
+            return out, dict(pool_k=pool_k, pool_v=pool_v)
 
         h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)
         h, new_cl, q = _block_decode(layer_params, h, cl, pos, arch,

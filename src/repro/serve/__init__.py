@@ -1,4 +1,4 @@
-"""Continuous-batching tiered-KV serving runtime (docs/design.md §2c–2d)."""
+"""Continuous-batching tiered-KV serving runtime (docs/design.md §2c–2f)."""
 
 from repro.serve.engine import (ServingConfig, ServingEngine,
                                 sequential_baseline)

@@ -6,13 +6,22 @@ decode slots that independent sequences are admitted into and retired from,
 so one batched decode step serves every in-flight sequence at once (ragged
 ``pos`` — each slot sits at its own position).
 
-Since PR 3 the far tier behind the slots is a **refcounted shared page
-pool** (``core.tiered_kv`` paged mode, docs/design.md §2d): each slot's far
-view is a page table into the pool, and a radix prefix cache
-(``serve.prefix``) lets admissions reuse already-written pages for shared
-prompt prefixes — refcount++, prefill **only the suffix** (the modeled
-clock and the real compute both drop), and the suffix-chunked
-``transformer.prefill`` reproduces the full-prefill cache rows
+Since ISSUE 5 the **page pool is the single source of truth** for KV bytes
+(docs/design.md §2f).  The TL-DRAM near segment is not a duplicate of far
+rows — the isolation transistor splits one bitline so the same array serves
+both tiers — and the serving stack now honors that: there is no dense
+per-slot KV master.  Prefill scatters straight into allocated pool pages,
+decode appends write through the page table (``paged_step_metadata``'s
+append routing), and scoring / planning / pinning / the verification probe
+all read the pool.  Each slot maps only the pages its request can ever
+touch (``ceil((S + max_new - 1)/page)``), so live KV bytes track demand,
+not slot capacity — ``ServingReport.kv_bytes_live`` vs
+``kv_bytes_dense_equiv`` pins the ratio.
+
+A radix prefix cache (``serve.prefix``) lets admissions reuse
+already-written pages for shared prompt prefixes — refcount++, prefill
+**only the suffix** (the modeled clock and the real compute both drop), and
+the suffix-chunked prefill reproduces the full-prefill cache rows
 bit-identically.  The near tier is global: a hot shared page is scored by
 the aggregate attention mass of every referencing sequence and promoted
 ONCE for all tenants — the paper's one-IST-many-accesses economics.
@@ -21,32 +30,39 @@ Scheduler loop (``ServingEngine.run``):
 
   admit    : pop arrived requests into free slots — match the prompt
              against the radix prefix cache, map shared pages, prefill the
-             suffix (bucketed jit) into the slot's rows, seed the first
-             token, cache the prompt's new full pages in the pool.
-  decode   : ONE batched ``transformer.decode_step`` with per-slot ``pos``
-             (ragged state threaded through RoPE, cache scatter and the
-             attention mask) emits a token for every active slot.
-  maintain : every ``tier.interval`` steps, refresh the pool master copies
-             from the slot rows, score per-page attention mass with the
-             step's layer-0 queries, aggregate it onto pool pages, and run
-             the configured policy (SC/WMC/BBC via
-             ``paged_plan_and_migrate``; STATIC pins each slot once at its
-             first interval) — the amortized IST.
+             suffix straight into fresh pool pages (one jitted program),
+             seed the first token.
+  decode   : ONE batched ``transformer.paged_decode_step`` with per-slot
+             ``pos`` emits a token for every active slot, appending K/V
+             through the page table into the pool — via the fused
+             page-table-walking kernel (``tier.fused_kernel``) or the
+             materializing oracle path (bit-identical logits to the
+             retired PR-4 dense-master path).
+  maintain : every ``tier.interval`` steps, score per-page attention mass
+             with the step's layer-0 queries (pool-natively — the fused
+             mode scores through `kernels.paged_masses`, no far-view
+             gather), aggregate it onto pool pages, and run the configured
+             policy (SC/WMC/BBC via ``paged_plan_and_migrate``; STATIC
+             pins each slot once at its first interval) — the amortized
+             IST.  Mapping changes re-derive the per-layer near buffers
+             from the pool (``refresh_near_from_pool``).
   retire   : finished sequences release their page refs; pages at refcount
              zero are freed unless the prefix cache retains them for
-             re-arrivals (multi-turn chat keeps hitting, and a page's near
-             residency survives its tenants).
+             re-arrivals.  At run end a refcount sweep asserts ZERO
+             orphaned pages (every page free, referenced-by-nobody, or
+             trie-retained — and nothing else).
 
-The decode path is *exact* (full-cache attention with ragged masks), so
-emitted tokens match the single-sequence ``greedy_generate`` reference
-bit-for-bit with sharing on or off (pinned in
-tests/test_prefix_sharing.py); the paged tiered state drives the byte-cost
-model and, optionally, a read-path verification probe
+The decode path is *exact* (full-live-prefix attention in both read
+modes), so emitted tokens match the single-sequence ``greedy_generate``
+reference bit-for-bit with sharing on or off (tests/test_prefix_sharing.py,
+tests/test_serving_engine.py); the paged tiered state drives the byte-cost
+model and, optionally, a pool-native read-path verification probe
 (``verify_tiered_read``).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from collections import deque
 from dataclasses import dataclass, field
@@ -63,6 +79,11 @@ from repro.models import transformer
 from repro.serve.metrics import CostModel, ServingReport
 from repro.serve.prefix import RadixPrefixCache
 from repro.serve.trace import Request
+
+# the mapping-only tier-state leaves the engine owns (pool/near buffers are
+# separate per-layer arrays — the ownership inversion)
+_TIER_KEYS = ("page_table", "slot_of_page", "page_of_slot", "scores",
+              "last_use", "step", "migrations")
 
 
 @dataclass
@@ -81,8 +102,8 @@ class ServingConfig:
                                    # slot fully plus retention slack for the
                                    # prefix cache
     verify_tiered_read: bool = False   # probe paged tiered read vs
-                                       # monolithic attention at every
-                                       # planning pass
+                                       # attention over the materialized
+                                       # pool view at every planning pass
 
 
 @dataclass
@@ -104,39 +125,70 @@ class ServingEngine:
             "prefix sharing needs 1-D positions"
         self.params, self.arch, self.cfg = params, arch, cfg
         self.n_pages = cfg.max_len // cfg.tier.page
-        # fused mode (ISSUE 4): the decode step reads through the
-        # page-table-walking kernel over PER-LAYER pool/near buffers —
-        # far bytes touched per step = live non-promoted page rows only
-        self.fused = bool(cfg.tier.fused_kernel)
+        tier_cfg = cfg.tier
+        # fused mode (ISSUE 4/5): reads walk the page table in-kernel and
+        # scoring runs the pool-native mass kernel; the non-fused mode
+        # materializes per-layer far views from the SAME pool (the oracle)
+        self.fused = bool(tier_cfg.fused_kernel)
         # Pool sizing: worst case (no sharing) every slot maps private
         # pages; the slack keeps retired prompts cached for re-arrivals.
         self.pool_pages = cfg.pool_pages if cfg.pool_pages is not None \
             else (cfg.n_slots + 4) * self.n_pages
         assert self.pool_pages >= cfg.n_slots * self.n_pages, \
             "pool must at least cover the slot pool"
-        self._decode = jax.jit(
-            lambda p, c, b: transformer.decode_step(p, c, b, arch,
-                                                    want_aux=True))
-        self._plan = jax.jit(
-            lambda c, q, pos, idle, m: tkv.paged_plan_and_migrate(
-                c, q, pos, cfg.tier, idle=idle, masses=m))
+        P = self.pool_pages
+
+        from repro.launch.serve import (make_paged_tiered_decode_step,
+                                        make_pool_prefill_step,
+                                        make_pool_suffix_prefill_step)
+        self._decode = jax.jit(make_paged_tiered_decode_step(arch, tier_cfg))
+        # per-step read metadata, computed ONCE per tick and shared by
+        # every layer: lengths = pos + 1 (the appended token is live),
+        # append routing from pos
+        self._meta = jax.jit(
+            lambda tier, pos: tkv.paged_step_metadata(
+                tier, pos + 1, tier_cfg, append_pos=pos, pool_pages=P))
+
+        def _view(tier, pk, pv, nk, nv):
+            """Single-layer tiered_kv view over layer 0 of the per-layer
+            buffers (sliced inside jit: lazy, and unused slices are DCE'd).
+            Layer 0 is representative — every layer shares one page table
+            and one near mapping; the scoring query is layer 0's."""
+            return {**tier, "pool_k": pk[0], "pool_v": pv[0],
+                    "near_k": nk[0], "near_v": nv[0]}
+
+        def _plan_fn(tier, pk, pv, nk, nv, q, pos, idle, m):
+            new = tkv.paged_plan_and_migrate(
+                _view(tier, pk, pv, nk, nv), q, pos, tier_cfg, idle=idle,
+                masses=m)
+            return {k: new[k] for k in _TIER_KEYS}
+
+        self._plan = jax.jit(_plan_fn)
         self._masses = jax.jit(
-            lambda q, c, pos: tkv.paged_page_masses(q, c, pos, cfg.tier))
-        self._refresh = jax.jit(
-            lambda c, k0, v0: tkv.refresh_pool_from_slots(c, k0, v0,
-                                                          cfg.tier))
-        self._read = jax.jit(
-            lambda c, q, pos: tkv.paged_tiered_attention(c, q, pos,
-                                                         cfg.tier))
+            lambda q, tier, pk, pv, pos: tkv.paged_page_masses(
+                q, {**tier, "pool_k": pk[0], "pool_v": pv[0]}, pos,
+                tier_cfg))
+
+        probe_cfg = dataclasses.replace(tier_cfg, gather_kernel=False,
+                                        fused_kernel=False)
+
+        def _probe_fn(tier, pk, pv, nk, nv, q, pos):
+            view = _view(tier, pk, pv, nk, nv)
+            got = tkv.paged_tiered_attention(view, q, pos, tier_cfg)
+            far_k, far_v = tkv.paged_far_view(view, probe_cfg)
+            want = ref.decode_attention_ref(q[:, None], far_k, far_v,
+                                            pos)[:, 0]
+            return got, want
+
+        self._probe = jax.jit(_probe_fn)
+        self._sync_near = jax.jit(tkv.refresh_near_from_pool)
         # jax.jit caches per input shape, so one wrapper covers every
         # prompt-length bucket (and every matched-prefix length)
-        from repro.launch.serve import make_suffix_prefill_step
         self._prefill = jax.jit(
-            lambda p, b: transformer.prefill(p, b, arch,
-                                             max_len=cfg.max_len))
-        self._prefill_sfx = jax.jit(make_suffix_prefill_step(arch,
-                                                             cfg.max_len))
-        page = cfg.tier.page
+            make_pool_prefill_step(arch, cfg.max_len, tier_cfg.page))
+        self._prefill_sfx = jax.jit(
+            make_pool_suffix_prefill_step(arch, cfg.max_len, tier_cfg.page))
+        page = tier_cfg.page
 
         def gather_prefix(pool_k, pool_v, ids):
             """(L,P,page,Hkv,hd) pools + (m,) ids -> (L,1,m*page,Hkv,hd)."""
@@ -145,47 +197,7 @@ class ServingEngine:
             return (k.reshape(L, 1, m * page, Hkv, hd),
                     pool_v[:, ids].reshape(L, 1, m * page, Hkv, hd))
 
-        def write_pages(pool_k, pool_v, k_rows, v_rows, ids):
-            """Scatter slot rows (L,T,Hkv,hd) into full-layer pool pages;
-            ids: (n_pages,) pool id per prompt page, -1 entries dropped."""
-            L, T, Hkv, hd = k_rows.shape
-            n = ids.shape[0]
-            P = pool_k.shape[1]
-            safe = jnp.where(ids >= 0, ids, P)
-            rk = k_rows.reshape(L, n, page, Hkv, hd)
-            rv = v_rows.reshape(L, n, page, Hkv, hd)
-            return (pool_k.at[:, safe].set(rk, mode="drop"),
-                    pool_v.at[:, safe].set(rv, mode="drop"))
-
         self._gather_prefix = jax.jit(gather_prefix)
-        self._write_pages = jax.jit(write_pages)
-
-        if self.fused:
-            from repro.launch.serve import make_paged_tiered_decode_step
-            self._decode_fused = jax.jit(
-                make_paged_tiered_decode_step(arch, cfg.tier))
-            # per-step read metadata, computed ONCE per tick and shared by
-            # every layer: lengths = pos + 1 (the appended token is live),
-            # append routing from pos
-            self._meta = jax.jit(
-                lambda paged, pos: tkv.paged_step_metadata(
-                    paged, pos + 1, cfg.tier, append_pos=pos))
-
-            def sync_near(pool_k, pool_v, page_of_slot):
-                """Re-derive the per-layer near buffers from the per-layer
-                pools under the (just-changed) global near mapping.  The
-                near-copy == pool-master invariant makes a full re-gather
-                equivalent to incremental page copies; C is small and this
-                runs only when the mapping changes (plan/pin/release)."""
-                safe = jnp.maximum(page_of_slot, 0)
-                occ = (page_of_slot >= 0)[None, :, None, None, None]
-                nk = jnp.where(occ, pool_k[:, safe], 0)
-                nv = jnp.where(occ, pool_v[:, safe], 0)
-                L, C, pg, Hkv, hd = nk.shape
-                return (nk.reshape(L, C * pg, Hkv, hd),
-                        nv.reshape(L, C * pg, Hkv, hd))
-
-            self._sync_near = jax.jit(sync_near)
 
     # -- admission ----------------------------------------------------------
 
@@ -196,71 +208,65 @@ class ServingEngine:
         S = int(prompt.shape[0])
         assert S + req.max_new_tokens <= cfg.max_len, \
             f"request {req.rid} does not fit max_len={cfg.max_len}"
+        # map ONLY the pages this request can ever touch: prefill writes
+        # [0, S), decode appends reach at most S + max_new - 2 (the final
+        # emitted token is never appended) — live KV bytes track demand
+        n_need = max(1, -(-(S + req.max_new_tokens - 1) // page))
 
-        # 1. prefix match: reuse already-written pool pages (refcount++)
+        # 1. prefix match: reuse already-written pool pages (refcount++).
+        #    match() caps at (S-1)//page pages <= n_need - 1, so at least
+        #    one fresh page always remains for the suffix.
         matched_ids = [] if self.prefix is None \
             else self.prefix.match(prompt)
         m = len(matched_ids)
         matched = m * page
         if m:
             self.pool.acquire(matched_ids)
-        # 2. map the rest of the slot's range onto fresh pages (evicting
+        # 2. map the rest of the request's range onto fresh pages (evicting
         #    LRU cached-idle pages under pressure; their tier state resets)
         if self.prefix is not None:
-            fresh, evicted = self.prefix.allocate(self.n_pages - m)
+            fresh, evicted = self.prefix.allocate(n_need - m)
             if evicted:
-                self.paged = tkv.paged_release_pages(self.paged, evicted,
-                                                     cfg.tier)
+                self.tier = tkv.paged_release_pages(self.tier, evicted,
+                                                    cfg.tier)
         else:
-            fresh = self.pool.allocate(self.n_pages - m)
+            fresh = self.pool.allocate(n_need - m)
         row = matched_ids + fresh
-        self.pt_host[slot] = row
-        self.paged["page_table"] = self.paged["page_table"].at[slot].set(
-            jnp.asarray(row, jnp.int32))
+        self.pt_host[slot] = -1
+        self.pt_host[slot, :n_need] = row
+        self.tier["page_table"] = self.tier["page_table"].at[slot].set(
+            jnp.asarray(self.pt_host[slot], jnp.int32))
 
-        # 3. prefill ONLY the suffix (bucket-padded); shared-prefix K/V rows
-        #    come from the full-layer pool — real compute drops with matched
+        # 3. prefill ONLY the suffix (bucket-padded) STRAIGHT INTO the
+        #    slot's fresh pool pages — one jitted program; the dense rows
+        #    are a transient inside it.  Shared-prefix K/V comes from the
+        #    pool; real compute drops with ``matched``.
         s_len = S - matched
         s_pad = -(-s_len // cfg.prefill_bucket) * cfg.prefill_bucket
         padded = np.zeros((1, s_pad), np.int32)
         padded[0, :s_len] = prompt[matched:]
+        ids = -np.ones(self.n_pages, np.int32)
+        ids[m:n_need] = row[m:]
+        ids = jnp.asarray(ids)
         if m:
             kpre, vpre = self._gather_prefix(
-                self.pool_layers_k, self.pool_layers_v,
+                self.pool_k, self.pool_v,
                 jnp.asarray(matched_ids, jnp.int32))
             positions = matched + np.arange(s_pad, dtype=np.int32)[None]
-            logits, pcache = self._prefill_sfx(
+            logits, self.pool_k, self.pool_v = self._prefill_sfx(
                 self.params, {"tokens": padded, "positions": positions},
-                kpre, vpre)
+                kpre, vpre, self.pool_k, self.pool_v, ids)
         else:
-            logits, pcache = self._prefill(self.params, {"tokens": padded})
+            logits, self.pool_k, self.pool_v = self._prefill(
+                self.params, {"tokens": padded}, self.pool_k, self.pool_v,
+                ids)
         first = int(jnp.argmax(logits[0, s_len - 1]))
-        # write the sequence's K/V rows into the slot pool (positions >= S
-        # are zero-padded by prefill and masked by the ragged live mask)
-        self.cache["k"] = self.cache["k"].at[:, slot].set(pcache["k"][:, 0])
-        self.cache["v"] = self.cache["v"].at[:, slot].set(pcache["v"][:, 0])
 
-        # 4. write the slot's fresh pages into the full-layer pool: the
-        #    FUSED read path walks the pool, so it needs every page of the
-        #    row (matched shared pages are already there); prefix sharing
-        #    additionally indexes the prompt's new full pages for sharers
-        if self.fused:
-            ids = np.asarray(row, np.int32).copy()
-            ids[:m] = -1
-            self.pool_layers_k, self.pool_layers_v = self._write_pages(
-                self.pool_layers_k, self.pool_layers_v,
-                pcache["k"][:, 0], pcache["v"][:, 0], jnp.asarray(ids))
+        # 4. index the prompt's new full pages for later sharers — they are
+        #    already in the pool (prefill wrote them); no re-gather
         if self.prefix is not None:
             n_full = S // page
             if n_full > m:
-                if not self.fused:   # fused already wrote the whole row
-                    ids = -np.ones(self.n_pages, np.int32)
-                    ids[m:n_full] = row[m:n_full]
-                    self.pool_layers_k, self.pool_layers_v = \
-                        self._write_pages(
-                            self.pool_layers_k, self.pool_layers_v,
-                            pcache["k"][:, 0], pcache["v"][:, 0],
-                            jnp.asarray(ids))
                 self.prefix.insert(prompt[:n_full * page], row[:n_full])
         self._after_mapping_change()
 
@@ -294,31 +300,30 @@ class ServingEngine:
         pids = [int(p) for p in self.pt_host[slot] if p >= 0]
         freed = self.pool.release(pids)
         if freed:
-            self.paged = tkv.paged_release_pages(self.paged, freed,
-                                                 self.cfg.tier)
+            self.tier = tkv.paged_release_pages(self.tier, freed,
+                                                self.cfg.tier)
         self.pt_host[slot] = -1
-        self.paged["page_table"] = self.paged["page_table"].at[slot].set(-1)
+        self.tier["page_table"] = self.tier["page_table"].at[slot].set(-1)
         self._after_mapping_change()
         self.free.append(slot)
         self.free.sort()
 
-    # -- fused-mode bookkeeping ---------------------------------------------
+    # -- pool-native bookkeeping ---------------------------------------------
 
     def _after_mapping_change(self):
-        """Fused mode: mark the per-layer near buffers / host residency
-        mirror stale after any event that moves the global near mapping or
-        the page tables (plan / pin / release / admit / retire).  The
-        actual re-sync happens once per tick (``_flush_mapping``) — N
-        retires + M admits in one tick cost one gather, not N+M."""
+        """Mark the per-layer near buffers / host residency mirror stale
+        after any event that moves the global near mapping or the page
+        tables (plan / pin / release / admit / retire).  The actual re-sync
+        happens once per tick (``_flush_mapping``) — N retires + M admits
+        in one tick cost one gather, not N+M."""
         self._mapping_dirty = True
 
     def _flush_mapping(self):
-        if not (self.fused and self._mapping_dirty):
+        if not self._mapping_dirty:
             return
-        self.near_layers_k, self.near_layers_v = self._sync_near(
-            self.pool_layers_k, self.pool_layers_v,
-            self.paged["page_of_slot"])
-        sop = np.asarray(self.paged["slot_of_page"])
+        self.near_k, self.near_v = self._sync_near(
+            self.pool_k, self.pool_v, self.tier["page_of_slot"])
+        sop = np.asarray(self.tier["slot_of_page"])
         self._promoted_host = (self.pt_host >= 0) \
             & (sop[np.maximum(self.pt_host, 0)] >= 0)
         self._mapping_dirty = False
@@ -334,6 +339,44 @@ class ServingEngine:
         walk = (self.pt_host >= 0) & ~self._promoted_host
         return int((live * walk).sum())
 
+    def _account_kv_bytes(self):
+        """Track peak LIVE KV bytes: referenced pool pages + the near-tier
+        copies, across all layers, K and V.  Trie-retained idle pages are
+        reclaimable cache, accounted separately (``kv_bytes_cached``)."""
+        item = self.pool_k.dtype.itemsize
+        row = self.arch.n_kv_heads * self.arch.resolved_head_dim * item * 2
+        L = self.arch.n_layers
+        page = self.cfg.tier.page
+        ref_pages = int((self.pool.refcount > 0).sum())
+        near_rows = self.cfg.tier.near_pages * page
+        live = L * (ref_pages * page + near_rows) * row
+        cached = int(((self.pool.refcount == 0) & self.pool.cached).sum())
+        self.report.kv_bytes_live = max(self.report.kv_bytes_live, live)
+        self.report.kv_bytes_cached = max(self.report.kv_bytes_cached,
+                                          L * cached * page * row)
+
+    def _assert_zero_orphans(self):
+        """Refcount sweep at engine shutdown (ISSUE 5 satellite): with all
+        sequences retired, every pool page must be free, or retained by the
+        prefix trie — anything still referenced (or cached outside the
+        trie) is an orphan the release path leaked."""
+        leaked = np.flatnonzero(self.pool.refcount > 0)
+        if leaked.size:
+            raise RuntimeError(
+                f"orphaned pool pages at shutdown (refcount > 0 with no "
+                f"live slot): {leaked.tolist()}")
+        cached = set(np.flatnonzero(self.pool.cached).tolist())
+        trie = set() if self.prefix is None else self.prefix.cached_pages()
+        if cached != trie:
+            raise RuntimeError(
+                f"retention flags diverge from the prefix trie: "
+                f"cached-not-in-trie {sorted(cached - trie)}, "
+                f"trie-not-cached {sorted(trie - cached)}")
+        free = set(int(p) for p in self.pool._free)
+        if (free | cached) != set(range(self.pool_pages)) or (free & cached):
+            raise RuntimeError("free list + trie retention do not "
+                               "partition the pool at shutdown")
+
     # -- background tier maintenance ----------------------------------------
 
     def _pin_static(self, masses: np.ndarray, need: np.ndarray,
@@ -343,8 +386,8 @@ class ServingEngine:
         later migration, no eviction of earlier pins)."""
         cfg = self.cfg
         tier = cfg.tier
-        ros = np.asarray(self.paged["page_of_slot"])
-        sop = np.asarray(self.paged["slot_of_page"])
+        ros = np.asarray(self.tier["page_of_slot"])
+        sop = np.asarray(self.tier["slot_of_page"])
         free_slots = [c for c in range(ros.shape[0]) if ros[c] < 0]
         complete = ((np.arange(self.n_pages)[None, :] + 1) * tier.page
                     <= self.pos[:, None])
@@ -358,8 +401,8 @@ class ServingEngine:
         ranked = sorted(cand_mass, key=lambda p: -cand_mass[p])
         chosen = ranked[:len(free_slots)]
         if chosen:
-            self.paged = tkv.paged_pin_pages(self.paged, chosen,
-                                             free_slots[:len(chosen)], tier)
+            self.tier = tkv.paged_pin_pages(self.tier, chosen,
+                                            free_slots[:len(chosen)], tier)
             clock += cfg.cost.migration_cost(len(chosen), tier.page)
             self.report.migrations += len(chosen)  # pin copies are ISTs too
         self._static_pinned |= need
@@ -370,28 +413,27 @@ class ServingEngine:
         tier = cfg.tier
         active = np.array([s is not None for s in self.slots])
         pos_vec = jnp.asarray(self.pos, jnp.int32)
-        # bring the pool master copies up to date with the decode appends
-        # (one scatter; shared pages receive identical bytes from any tenant)
-        self.paged = self._refresh(self.paged, self.cache["k"][0],
-                                   self.cache["v"][0])
-        # one scoring pass per interval: the same per-slot masses drive
-        # planning/pinning AND the hit-mass metric below
-        masses_dev = self._masses(q0, self.paged, pos_vec)
+        # one scoring pass per interval, straight off the pool (fused mode:
+        # the pool-native mass kernel — no far-view gather); the same
+        # per-slot masses drive planning/pinning AND the hit-mass metric
+        masses_dev = self._masses(q0, self.tier, self.pool_k, self.pool_v,
+                                  pos_vec)
         if tier.policy.upper() == "STATIC":
             need = active & ~self._static_pinned
             if need.any():
                 clock = self._pin_static(np.asarray(masses_dev), need, clock)
                 self._after_mapping_change()
         else:
-            before = int(self.paged["migrations"])
-            self.paged = self._plan(self.paged, q0, pos_vec, idle,
-                                    masses_dev)
-            moved = int(self.paged["migrations"]) - before
+            before = int(self.tier["migrations"])
+            self.tier = self._plan(self.tier, self.pool_k, self.pool_v,
+                                   self.near_k, self.near_v, q0, pos_vec,
+                                   idle, masses_dev)
+            moved = int(self.tier["migrations"]) - before
             clock += cfg.cost.migration_cost(moved, tier.page)
             self.report.migrations += moved
             if moved:     # mapping unchanged when nothing migrated
                 self._after_mapping_change()
-        sop = np.asarray(self.paged["slot_of_page"])
+        sop = np.asarray(self.tier["slot_of_page"])
         promoted = (self.pt_host >= 0) & (sop[np.maximum(self.pt_host, 0)]
                                           >= 0)              # (B, n_pages)
         self._near_tokens = promoted.sum(axis=1) * tier.page
@@ -405,10 +447,10 @@ class ServingEngine:
                 self.report.near_hit_mass.append(
                     float((masses * promoted)[active].sum() / tot))
             if cfg.verify_tiered_read:
-                got = self._read(self.paged, q0, pos_vec)
-                want = ref.decode_attention_ref(
-                    q0[:, None], self.cache["k"][0], self.cache["v"][0],
-                    pos_vec)[:, 0]
+                self._flush_mapping()   # the probe reads the near buffers
+                got, want = self._probe(self.tier, self.pool_k, self.pool_v,
+                                        self.near_k, self.near_v, q0,
+                                        pos_vec)
                 err = float(jnp.max(jnp.abs(
                     (got - want)[jnp.asarray(active)])))
                 self.report.max_read_err = max(self.report.max_read_err, err)
@@ -423,39 +465,28 @@ class ServingEngine:
         self.report = ServingReport(scenario=scenario,
                                     policy=cfg.tier.policy,
                                     n_requests=len(trace))
-        self.cache = transformer.init_cache(arch, cfg.n_slots, cfg.max_len)
-        self.paged = tkv.init_paged_cache(
-            cfg.tier, cfg.n_slots, self.n_pages, self.pool_pages,
-            arch.n_kv_heads, arch.resolved_head_dim,
-            dtype=self.cache["k"].dtype)
+        hd = arch.resolved_head_dim
+        dtype = jnp.bfloat16
+        # THE KV store: per-layer shared page pool + per-layer global near
+        # buffer.  No dense per-slot master exists anywhere in this engine.
+        pshape = (arch.n_layers, self.pool_pages, cfg.tier.page,
+                  arch.n_kv_heads, hd)
+        self.pool_k = jnp.zeros(pshape, dtype)
+        self.pool_v = jnp.zeros(pshape, dtype)
+        nshape = (arch.n_layers, cfg.tier.near_pages * cfg.tier.page,
+                  arch.n_kv_heads, hd)
+        self.near_k = jnp.zeros(nshape, dtype)
+        self.near_v = jnp.zeros(nshape, dtype)
+        self.tier = tkv.init_tier_state(cfg.n_slots, self.n_pages,
+                                        self.pool_pages, cfg.tier.near_pages)
         self.pool = PagePool(self.pool_pages)
         self.prefix = RadixPrefixCache(self.pool, cfg.tier.page) \
             if cfg.share_prefix else None
-        if cfg.share_prefix or self.fused:
-            # Full-layer K/V store indexed by pool page id.  Prefix sharing
-            # reads cached prompt pages out of it; the FUSED read path makes
-            # it the actual serving far tier (every layer's kernel walks
-            # it).  Sizing it to the whole pool trades memory for a flat
-            # index; a production deployment would key a smaller store by
-            # cached page (the trie already owns that lifecycle).
-            hd = arch.resolved_head_dim
-            shape = (arch.n_layers, self.pool_pages, cfg.tier.page,
-                     arch.n_kv_heads, hd)
-            self.pool_layers_k = jnp.zeros(shape, self.cache["k"].dtype)
-            self.pool_layers_v = jnp.zeros(shape, self.cache["v"].dtype)
-        if self.fused:
-            # per-layer global near buffers (layer 0 mirrors self.paged's)
-            hd = arch.resolved_head_dim
-            nshape = (arch.n_layers, cfg.tier.near_pages * cfg.tier.page,
-                      arch.n_kv_heads, hd)
-            self.near_layers_k = jnp.zeros(nshape, self.cache["k"].dtype)
-            self.near_layers_v = jnp.zeros(nshape, self.cache["v"].dtype)
-            # host mirror of per-(slot, page) near residency, re-synced
-            # (with the near buffers) once per tick when the mapping moved
-            # — drives the independent shadow accounting of far rows
-            # touched (ISSUE 4 acceptance)
-            self._promoted_host = np.zeros((cfg.n_slots, self.n_pages), bool)
-            self._mapping_dirty = False
+        # host mirror of per-(slot, page) near residency, re-synced (with
+        # the near buffers) once per tick when the mapping moved — drives
+        # the independent shadow accounting of far rows touched
+        self._promoted_host = np.zeros((cfg.n_slots, self.n_pages), bool)
+        self._mapping_dirty = False
         self.pt_host = -np.ones((cfg.n_slots, self.n_pages), np.int64)
         self.pos = np.zeros(cfg.n_slots, np.int64)
         self.tok = np.zeros(cfg.n_slots, np.int64)
@@ -465,6 +496,9 @@ class ServingEngine:
         self._near_tokens = np.zeros(cfg.n_slots, np.int64)
         self._static_pinned = np.zeros(cfg.n_slots, bool)
         self._visible_clock: dict[int, float] = {}
+        self.report.kv_bytes_dense_equiv = (
+            arch.n_layers * cfg.n_slots * cfg.max_len
+            * arch.n_kv_heads * hd * jnp.dtype(dtype).itemsize * 2)
 
         queue = deque(sorted(trace, key=lambda r: (r.arrival, r.rid)))
         tick, clock, steps = 0, 0.0, 0
@@ -482,41 +516,35 @@ class ServingEngine:
                 st = self.slots[b]
                 if st is not None and len(st.emitted) >= st.req.max_new_tokens:
                     self._retire(b)
+            self._account_kv_bytes()
             active_idx = [b for b, s in enumerate(self.slots) if s is not None]
             if not active_idx:
                 if queue:
                     tick = max(tick + 1, queue[0].arrival)  # idle fast-forward
                 continue
 
-            self.cache["pos"] = jnp.asarray(self.pos, jnp.int32)
+            self._flush_mapping()
+            pos_dev = jnp.asarray(self.pos, jnp.int32)
             tokens = {"tokens": jnp.asarray(self.tok[:, None], jnp.int32)}
+            meta = self._meta(self.tier, pos_dev)
+            kv_cache = {"pool_k": self.pool_k, "pool_v": self.pool_v,
+                        "near_k": self.near_k, "near_v": self.near_v,
+                        "pos": pos_dev}
+            logits, new_cache, aux = self._decode(self.params, kv_cache,
+                                                  tokens, meta)
+            self.pool_k = new_cache["pool_k"]
+            self.pool_v = new_cache["pool_v"]
             if self.fused:
-                self._flush_mapping()
-                meta = self._meta(self.paged, self.cache["pos"])
-                fcache = {**self.cache,
-                          "pool_k": self.pool_layers_k,
-                          "pool_v": self.pool_layers_v,
-                          "near_k": self.near_layers_k,
-                          "near_v": self.near_layers_v}
-                logits, new_cache, aux = self._decode_fused(
-                    self.params, fcache, tokens, meta)
-                self.pool_layers_k = new_cache.pop("pool_k")
-                self.pool_layers_v = new_cache.pop("pool_v")
-                new_cache.pop("near_k")
-                new_cache.pop("near_v")
                 # the walk's accounting (device) + an independent host
                 # shadow: both must equal the live non-promoted page rows
                 self.report.far_rows_touched += int(meta["walk_live"].sum())
                 self.report.far_rows_host += self._far_rows_shadow()
             else:
-                logits, new_cache, aux = self._decode(
-                    self.params, self.cache, tokens)
-                # the dense step materializes/attends the full far view
+                # the materializing path gathers the full far view
                 self.report.far_rows_touched += \
                     self.n_pages * cfg.tier.page * cfg.n_slots
             self.report.far_rows_dense += \
                 self.n_pages * cfg.tier.page * cfg.n_slots
-            self.cache = new_cache
             toks = np.asarray(jnp.argmax(logits, axis=-1))[:, 0]
 
             live = self.pos[active_idx] + 1
@@ -538,6 +566,7 @@ class ServingEngine:
                 clock = self._maintain(aux["q0"], clock, idle)
             tick += 1
 
+        self._assert_zero_orphans()
         self.report.steps = steps
         self.report.wall_s = time.perf_counter() - t0
         self.report.modeled_time = clock

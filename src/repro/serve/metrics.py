@@ -91,6 +91,15 @@ class ServingReport:
     far_rows_host: int = 0           # independent host-side shadow of the
                                      # fused walk (device/host parity pin)
     far_rows_dense: int = 0          # what a materializing path would touch
+    # live-KV accounting (ISSUE 5): with the pool as the single source of
+    # truth, what the engine actually keeps resident vs what the retired
+    # dense per-slot master would have held.
+    kv_bytes_live: int = 0           # PEAK referenced-pool + near bytes
+                                     # over the run (all layers, K and V)
+    kv_bytes_cached: int = 0         # peak prefix-retained idle bytes
+                                     # (reclaimable cache, not live state)
+    kv_bytes_dense_equiv: int = 0    # L * n_slots * max_len rows x2 — the
+                                     # dense master's fixed footprint
 
     @property
     def tokens_per_s_wall(self) -> float:
@@ -121,6 +130,15 @@ class ServingReport:
         return percentiles(self.ttfts, qs=(50,))[0]
 
     @property
+    def kv_live_ratio(self) -> float:
+        """Peak live KV bytes as a fraction of the dense-equivalent master
+        (< 1.0: the paged pool holds less than a per-slot dense cache
+        would; the shared/long-prefix traces pin <= 0.6)."""
+        if self.kv_bytes_dense_equiv == 0:
+            return 0.0
+        return self.kv_bytes_live / self.kv_bytes_dense_equiv
+
+    @property
     def far_rows_saved_frac(self) -> float:
         """Fraction of far-view rows the configured read path did NOT touch
         vs the materializing baseline (0.0 for the dense path itself, and
@@ -138,9 +156,10 @@ class ServingReport:
                 round(self.mean_hit_mass, 3), self.migrations,
                 round(p50, 1), round(p99, 1),
                 round(self.prefix_hit_rate, 3), self.prefill_tokens,
-                round(self.p50_ttft, 1), self.far_rows_touched)
+                round(self.p50_ttft, 1), self.far_rows_touched,
+                self.kv_bytes_live, round(self.kv_live_ratio, 3))
 
     HEADER = ("scenario", "policy", "tokens", "tok/s_wall",
               "tok/kcost_modeled", "near_hit_mass", "migrations",
               "p50_lat", "p99_lat", "prefix_hit_rate", "prefill_toks",
-              "p50_ttft", "far_rows")
+              "p50_ttft", "far_rows", "kv_bytes_live", "kv_live_ratio")

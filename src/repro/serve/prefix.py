@@ -155,5 +155,21 @@ class RadixPrefixCache:
         self.stats.evictions += 1
         return self.pool.drop_cached([node.page])
 
+    # -- consistency ----------------------------------------------------------
+
+    def cached_pages(self) -> set[int]:
+        """The pool page ids the trie currently retains — with the pool as
+        the single source of truth this must equal exactly the pool's
+        ``cached`` flag set (the engine's shutdown sweep asserts it; a
+        divergence means an insert/evict path leaked a retention flag)."""
+        out: set[int] = set()
+        stack = [self.root]
+        while stack:
+            node = stack.pop()
+            stack.extend(node.children.values())
+            if node is not self.root:
+                out.add(int(node.page))
+        return out
+
     def __len__(self) -> int:
         return self._n_nodes

@@ -164,6 +164,27 @@ def mixed_prefix(vocab: int, n_requests: int = 12, sys_len: int = 32,
     return reqs
 
 
+def long_context_summarize(vocab: int, n_requests: int = 6,
+                           doc_len: int = 192, question_len: int = 16,
+                           max_new_tokens: int = 8, gap: int = 4,
+                           seed: int = 7) -> list[Request]:
+    """Few slots, very long prompts: every request carries the SAME long
+    document plus a short unique question (summarize/QA-over-document
+    traffic).  The regime where a dense per-slot KV master hurt most —
+    each tenant re-stored the whole document — and where the pool-native
+    engine (ISSUE 5) wins most: the document's pages are stored once,
+    shared by every slot, and each slot maps only the pages its request
+    can touch.  ``doc_len`` should be a page multiple so the whole
+    document is shareable at page granularity."""
+    rng = np.random.default_rng(seed)
+    doc = _zipf_tokens(rng, vocab, doc_len)
+    return [Request(rid=i, arrival=i * gap,
+                    prompt=np.concatenate(
+                        [doc, _zipf_tokens(rng, vocab, question_len)]),
+                    max_new_tokens=max_new_tokens)
+            for i in range(n_requests)]
+
+
 SCENARIOS = {
     "steady_zipfian": steady_zipfian,
     "bursty": bursty,
@@ -172,4 +193,5 @@ SCENARIOS = {
     "shared_system_prompt": shared_system_prompt,
     "multi_turn_chat": multi_turn_chat,
     "mixed_prefix": mixed_prefix,
+    "long_context_summarize": long_context_summarize,
 }

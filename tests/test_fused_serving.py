@@ -182,16 +182,19 @@ class TestMetadataHoisting:
         assert bad not in shapes, \
             f"dense read path still builds a {bad} equality tensor"
 
-        # (b) the fused per-layer decode trace, meta precomputed per step
-        cache = transformer.init_cache(arch, B, n_pages * page)
-        cache["pos"] = pos
-        cache["pool_k"] = jnp.zeros(
-            (arch.n_layers, P, page, arch.n_kv_heads,
-             arch.resolved_head_dim), jnp.bfloat16)
+        # (b) the fused per-layer decode trace, meta precomputed per step.
+        # The cache is pool-only (ISSUE 5): no dense per-slot k/v leaves
+        # exist anywhere in the paged serving path.
+        cache = {
+            "pos": pos,
+            "pool_k": jnp.zeros(
+                (arch.n_layers, P, page, arch.n_kv_heads,
+                 arch.resolved_head_dim), jnp.bfloat16),
+            "near_k": jnp.zeros(
+                (arch.n_layers, C * page, arch.n_kv_heads,
+                 arch.resolved_head_dim), jnp.bfloat16),
+        }
         cache["pool_v"] = cache["pool_k"]
-        cache["near_k"] = jnp.zeros(
-            (arch.n_layers, C * page, arch.n_kv_heads,
-             arch.resolved_head_dim), jnp.bfloat16)
         cache["near_v"] = cache["near_k"]
         meta = tkv.paged_step_metadata(paged, pos + 1, tier, append_pos=pos)
         batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}

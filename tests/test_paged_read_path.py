@@ -11,7 +11,11 @@ page pool + radix prefix cache, asserting after EVERY step:
       with zero leaks once all sequences retire,
   (c) the occupied-near-slots-prefix invariant (and mapping bijection)
       holds for the global near mapping — including through the
-      release-path compaction that demotion of freed pages triggers.
+      release-path compaction that demotion of freed pages triggers,
+  (d) pool-as-truth (ISSUE 5): gathering pool pages through the page table
+      reproduces an INDEPENDENTLY-maintained dense oracle's rows exactly —
+      the single-source-of-truth property ownership inversion rests on
+      (there is no refresh pass to paper over a missed pool write).
 
 The harness drives the real API (``paged_append_token``,
 ``paged_plan_and_migrate``, ``paged_release_pages``, ``PagePool``,
@@ -118,6 +122,12 @@ class PagedWorld:
         self.pos = np.zeros(B, np.int64)
         self.active = np.zeros(B, bool)
         self.tokens = np.zeros((B, MAX_LEN), np.int64)
+        # pool-as-truth oracle (ISSUE 5): dense K/V rows maintained
+        # INDEPENDENTLY of the pool (straight from _kv at every admit /
+        # decode) — after every op, gathering pool pages through the page
+        # table must reproduce these rows EXACTLY
+        self.oracle_k = np.zeros((B, MAX_LEN, HKV, HD), np.float32)
+        self.oracle_v = np.zeros((B, MAX_LEN, HKV, HD), np.float32)
         # shared prompt families: admissions draw a family prefix + a
         # random tail, so the trie sees real hits and real misses
         self.families = [self.rng.integers(0, VOCAB, MAX_LEN)
@@ -187,6 +197,10 @@ class PagedWorld:
             self.prefix.insert(toks[:(S // PAGE) * PAGE],
                                row[:S // PAGE])
         self.tokens[b, :S] = toks
+        for p in range(S):                     # oracle rows: matched pages
+            kv = _kv(p, int(toks[p]))          # included (same (pos, token)
+            self.oracle_k[b, p] = kv[0]        # => same bytes as the pool's
+            self.oracle_v[b, p] = kv[1]        # first-tenant copy)
         self.pos[b] = S
         self.active[b] = True
 
@@ -211,6 +225,8 @@ class PagedWorld:
         for b in range(B):
             if can[b]:
                 self.tokens[b, self.pos[b]] = new_toks[b]
+                self.oracle_k[b, self.pos[b]] = kn[b, 0]
+                self.oracle_v[b, self.pos[b]] = vn[b, 0]
                 self.pos[b] += 1
 
     def migrate(self):
@@ -264,6 +280,19 @@ class PagedWorld:
             pos = jnp.asarray(self.pos, jnp.int32)
             got = _read_fn(self.kernel_mode)(self.cache, self.q, pos)
             k, v = self.dense_view()
+            # pool-as-truth (ISSUE 5): the pool gathered through the page
+            # table IS the oracle's dense rows, bit for bit, after every
+            # admit/decode/migrate/retire step — the invariant ownership
+            # inversion rests on (no refresh pass exists to paper over a
+            # missed write)
+            k_np, v_np = np.asarray(k), np.asarray(v)
+            for b in range(B):
+                n = int(self.pos[b])
+                if self.active[b] and n > 0:
+                    np.testing.assert_array_equal(
+                        k_np[b, :n], self.oracle_k[b, :n])
+                    np.testing.assert_array_equal(
+                        v_np[b, :n], self.oracle_v[b, :n])
             want_out = ref.decode_attention_ref(self.q[:, None], k, v,
                                                 pos)[:, 0]
             np.testing.assert_allclose(

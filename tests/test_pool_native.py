@@ -1,0 +1,264 @@
+"""Pool-native serving: the paged pool is the single source of truth
+(ISSUE 5 tentpole).
+
+Pins the ownership inversion end to end:
+
+  (1) the dense per-slot KV master is GONE — grep-provable: no
+      ``refresh_pool_from_slots`` anywhere under ``src/`` (there is nothing
+      left to refresh a pool *from*);
+  (2) the materializing (non-fused) paged decode step over pool bytes is
+      BIT-identical to the retired PR-4 dense-master reduction
+      (``decode_step``) — same values, same ``decode_attention`` kernel,
+      just gathered through the page table;
+  (3) ``kv_bytes_live`` (peak referenced pool pages + near copies) is
+      <= 0.6x the dense-equivalent master's bytes on the
+      shared_system_prompt and long_context_summarize traces — the
+      acceptance the PR's memory claim rests on;
+  (4) the shutdown refcount sweep proves zero orphaned pages through
+      retire + prefix-LRU-eviction churn, and actually detects planted
+      leaks (the sweep must not be a tautology);
+  (5) the pool-native page-mass reduction kernel (`kernels.paged_masses`)
+      matches its materializing oracle, and the fused scoring route of
+      ``paged_page_masses`` matches the XLA scoring route.
+"""
+
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core import tiered_kv as tkv
+from repro.core.tiered_kv import TieredKVConfig
+from repro.models import transformer
+from repro.serve import ServingConfig, ServingEngine
+from repro.serve.trace import SCENARIOS
+
+
+def _arch_params(seed=0):
+    arch = ARCHS["qwen3-1.7b"].reduced()
+    params = transformer.init_params(jax.random.key(seed), arch)
+    return arch, params
+
+
+class TestDenseMasterIsGone:
+    def test_refresh_pool_from_slots_absent_from_src(self):
+        """Acceptance (grep-provable): the slots->pool refresh pass cannot
+        exist when the pool is the only store."""
+        src = pathlib.Path(__file__).resolve().parents[1] / "src"
+        hits = [str(p) for p in src.rglob("*.py")
+                if "refresh_pool_from_slots" in p.read_text()]
+        assert not hits, f"dense-master refresh still referenced: {hits}"
+
+    def test_paged_decode_cache_has_no_dense_kv_leaves(self):
+        """The engine's decode cache pytree carries pool/near leaves only."""
+        arch, params = _arch_params()
+        tier = TieredKVConfig(page=16, near_pages=2, interval=4)
+        eng = ServingEngine(params, arch,
+                            ServingConfig(n_slots=2, max_len=32,
+                                          prefill_bucket=16, tier=tier))
+        trace = SCENARIOS["steady_zipfian"](arch.vocab, n_requests=2,
+                                            prompt_len=10, max_new_tokens=4,
+                                            gap=1)
+        eng.run(trace, "t")
+        assert not hasattr(eng, "cache"), "dense per-slot cache resurrected"
+        for leaf in ("pool_k", "pool_v", "near_k", "near_v"):
+            assert hasattr(eng, leaf)
+
+
+class TestMaterializingPathBitIdentical:
+    def test_pool_materialized_decode_equals_dense_master_decode(self):
+        """(2): write the SAME prefill rows into a dense per-slot cache and
+        into pool pages; one decode step through each path must produce
+        bit-identical logits — the pool changed where bytes live, not one
+        bit of the math."""
+        arch, params = _arch_params(seed=3)
+        B, S, page, n_pages = 3, 24, 16, 4
+        max_len = page * n_pages
+        P = B * n_pages + 2
+        C = 2
+        tier = TieredKVConfig(page=page, near_pages=C)
+        toks = jax.random.randint(jax.random.key(5), (B, S), 0, arch.vocab)
+        _, cache = transformer.prefill(params, {"tokens": toks}, arch,
+                                       max_len=max_len)
+        pos = jnp.full((B,), S, jnp.int32)
+        cache["pos"] = pos
+        step_tok = {"tokens": jnp.full((B, 1), 7, jnp.int32)}
+        la, ca = transformer.decode_step(params, cache, step_tok, arch)
+
+        # scatter the same rows into per-layer pool pages
+        L = arch.n_layers
+        hd = arch.resolved_head_dim
+        pool_k = jnp.zeros((L, P, page, arch.n_kv_heads, hd),
+                           cache["k"].dtype)
+        pool_v = jnp.zeros_like(pool_k)
+        pt = np.arange(B * n_pages, dtype=np.int32).reshape(B, n_pages)
+        for b in range(B):
+            rk = cache["k"][:, b].reshape(L, n_pages, page, arch.n_kv_heads,
+                                          hd)
+            rv = cache["v"][:, b].reshape(L, n_pages, page, arch.n_kv_heads,
+                                          hd)
+            pool_k = pool_k.at[:, pt[b]].set(rk)
+            pool_v = pool_v.at[:, pt[b]].set(rv)
+        state = tkv.init_tier_state(B, n_pages, P, C)
+        state["page_table"] = jnp.asarray(pt)
+        meta = tkv.paged_step_metadata(state, pos + 1, tier, append_pos=pos,
+                                       pool_pages=P)
+        pcache = {"pool_k": pool_k, "pool_v": pool_v,
+                  "near_k": jnp.zeros((L, C * page, arch.n_kv_heads, hd),
+                                      pool_k.dtype),
+                  "near_v": jnp.zeros((L, C * page, arch.n_kv_heads, hd),
+                                      pool_k.dtype),
+                  "pos": pos}
+        lb, cb = transformer.paged_decode_step(params, pcache, step_tok,
+                                               arch, meta, fused=False)
+        np.testing.assert_array_equal(np.asarray(la, np.float32),
+                                      np.asarray(lb, np.float32))
+        # and the appended token landed in the pool exactly where the dense
+        # path put it in its rows
+        for b in range(B):
+            pid, off = S // page, S % page
+            np.testing.assert_array_equal(
+                np.asarray(cb["pool_k"][:, pt[b, pid], off], np.float32),
+                np.asarray(ca["k"][:, b, S], np.float32))
+
+
+class TestKVBytesAcceptance:
+    def _ratio(self, scenario_cfg, trace_kw, eng_kw):
+        arch, params = _arch_params(seed=1)
+        trace = SCENARIOS[scenario_cfg](arch.vocab, **trace_kw)
+        tier = TieredKVConfig(page=16, near_pages=2, interval=4,
+                              policy="BBC")
+        cfg = ServingConfig(prefill_bucket=16, tier=tier, share_prefix=True,
+                            **eng_kw)
+        rep = ServingEngine(params, arch, cfg).run(trace, scenario_cfg)
+        assert rep.kv_bytes_live > 0 and rep.kv_bytes_dense_equiv > 0
+        return rep
+
+    def test_shared_system_prompt_live_kv_below_0p6_dense(self):
+        rep = self._ratio("shared_system_prompt",
+                          dict(n_requests=8, sys_len=64, user_len=16,
+                               max_new_tokens=12, gap=2),
+                          dict(n_slots=6, max_len=128))
+        assert rep.kv_live_ratio <= 0.6, \
+            f"live KV {rep.kv_live_ratio:.3f}x dense-equivalent (> 0.6)"
+
+    def test_long_context_summarize_live_kv_below_0p6_dense(self):
+        rep = self._ratio("long_context_summarize",
+                          dict(n_requests=4, doc_len=96, question_len=16,
+                               max_new_tokens=8, gap=3),
+                          dict(n_slots=3, max_len=128))
+        assert rep.kv_live_ratio <= 0.6, \
+            f"live KV {rep.kv_live_ratio:.3f}x dense-equivalent (> 0.6)"
+
+
+class TestZeroOrphanedPages:
+    def _run_engine(self, pool_pages=None):
+        arch, params = _arch_params(seed=2)
+        tier = TieredKVConfig(page=16, near_pages=2, interval=3,
+                              policy="BBC")
+        cfg = ServingConfig(n_slots=3, max_len=96, prefill_bucket=16,
+                            tier=tier, share_prefix=True,
+                            pool_pages=pool_pages)
+        trace = SCENARIOS["multi_turn_chat"](arch.vocab, n_sessions=4,
+                                             turns=4, base_len=24,
+                                             turn_len=16, max_new_tokens=6,
+                                             think_gap=8)
+        eng = ServingEngine(params, arch, cfg)
+        rep = eng.run(trace, "multi_turn_chat")
+        return eng, rep
+
+    def test_release_plus_lru_eviction_leaves_zero_orphans(self):
+        """ISSUE 5 satellite: drive retire + prefix-LRU-eviction churn with
+        a minimum-size pool (eviction pressure on every later admit); the
+        engine's shutdown sweep runs inside ``run`` — reaching this line
+        proves zero orphans — and the pool partition is re-checked here."""
+        eng, _ = self._run_engine(pool_pages=3 * 6)   # minimum legal pool
+        assert eng.prefix.stats.evictions > 0, \
+            "test must exercise the LRU eviction path"
+        assert (eng.pool.refcount == 0).all()
+        free = set(int(p) for p in eng.pool._free)
+        cached = set(np.flatnonzero(eng.pool.cached).tolist())
+        assert free | cached == set(range(eng.pool_pages))
+        assert not (free & cached)
+        assert cached == eng.prefix.cached_pages()
+
+    def test_sweep_detects_planted_refcount_leak(self):
+        """The sweep must not be a tautology: a planted leaked reference
+        (and a retention flag the trie does not own) must both raise."""
+        eng, _ = self._run_engine()
+        eng.pool.refcount[0] += 1
+        with pytest.raises(RuntimeError, match="orphaned"):
+            eng._assert_zero_orphans()
+        eng.pool.refcount[0] -= 1
+        eng._assert_zero_orphans()                    # clean again
+        victim = next(p for p in range(eng.pool_pages)
+                      if not eng.pool.cached[p])
+        eng.pool.cached[victim] = True
+        with pytest.raises(RuntimeError, match="diverge|partition"):
+            eng._assert_zero_orphans()
+
+
+class TestPagedMassesKernel:
+    def _random_state(self, seed, B=3, n_pages=5, P=18, page=8, HKV=2, HD=8,
+                      C=3):
+        rng = np.random.default_rng(seed)
+        cfg = TieredKVConfig(page=page, near_pages=C, interval=2,
+                             fused_kernel=True)
+        cache = tkv.init_paged_cache(cfg, B, n_pages, P, HKV, HD,
+                                     dtype=jnp.float32)
+        cache["pool_k"] = jnp.asarray(
+            rng.normal(size=cache["pool_k"].shape), jnp.float32)
+        cache["pool_v"] = jnp.asarray(
+            rng.normal(size=cache["pool_v"].shape), jnp.float32)
+        # rows map a prefix of pages (the engine's partial-mapping shape),
+        # drawn from distinct pool pages
+        pt = -np.ones((B, n_pages), np.int32)
+        perm = rng.permutation(P)
+        k = 0
+        n_mapped = rng.integers(1, n_pages + 1, size=B)
+        for b in range(B):
+            for j in range(int(n_mapped[b])):
+                pt[b, j] = perm[k]
+                k += 1
+        cache["page_table"] = jnp.asarray(pt)
+        pos = np.minimum(n_mapped * page - rng.integers(0, page, size=B),
+                         n_mapped * page)
+        q = jnp.asarray(rng.normal(size=(B, HKV * 2, HD)), jnp.float32)
+        return cfg, cache, jnp.asarray(pos, jnp.int32), q
+
+    @pytest.mark.parametrize("seed", [0, 1, 2])
+    def test_kernel_matches_materializing_oracle(self, seed):
+        from repro.kernels.paged_masses import paged_masses, paged_masses_ref
+        cfg, cache, pos, q = self._random_state(seed)
+        walk = tkv.paged_score_walk(cache, pos, cfg)
+        got = paged_masses(q, cache["pool_k"], walk["score_pid"],
+                           walk["score_live"], walk["score_len"],
+                           interpret=True)
+        want = paged_masses_ref(q, cache["pool_k"], walk["score_pid"],
+                                walk["score_live"], walk["score_len"])
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+        # entries past each slot's walk length are exactly zero
+        g = np.asarray(got)
+        for b in range(g.shape[0]):
+            assert (g[b, int(walk["score_len"][b]):] == 0).all()
+
+    @pytest.mark.parametrize("seed", [3, 4])
+    def test_fused_scoring_route_matches_xla_route(self, seed):
+        """``paged_page_masses`` through the pool-native kernel equals the
+        materializing XLA scorer — including near-resident pages (the
+        score walk must NOT skip promoted pages)."""
+        cfg, cache, pos, q = self._random_state(seed)
+        for _ in range(4):      # EMA buildup past the promotion threshold
+            cache = tkv.paged_plan_and_migrate(cache, q, pos, cfg)
+        assert int((np.asarray(cache["page_of_slot"]) >= 0).sum()) > 0, \
+            "state must include a promoted page"
+        fused = tkv.paged_page_masses(q, cache, pos, cfg)
+        import dataclasses
+        dense_cfg = dataclasses.replace(cfg, fused_kernel=False)
+        dense = tkv.paged_page_masses(q, cache, pos, dense_cfg)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(dense),
+                                   rtol=1e-5, atol=1e-6)

@@ -213,7 +213,7 @@ class TestServingBenchFull:
         from benchmarks import serving_bench
         rows = serving_bench.run_all()
         scenario_rows = [r for r in rows if r[0] in SCENARIOS]
-        assert len(scenario_rows) == 16
+        assert len(scenario_rows) == 20   # 5 scenarios x 4 policies
         prefix_rows = {r[1]: r[2] for r in rows if r[0] == "prefix_sharing"}
         assert prefix_rows["prefill_tokens_saved_frac"] >= 0.4
         assert prefix_rows["outputs_identical"] is True
