@@ -1,0 +1,64 @@
+"""CLI: ``python -m repro.analysis`` — run the invariant engine.
+
+Emits the JSON report on stdout; exits non-zero when any violation is not
+waived by the baseline file.  A human-readable summary goes to stderr so
+piping the JSON stays clean.
+
+    python -m repro.analysis                       # $REPRO_KERNEL_MODE
+    python -m repro.analysis --mode fused
+    python -m repro.analysis --baseline analysis_baseline.json --out rep.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+
+def main(argv=None) -> int:
+    from repro.analysis.runner import (DEFAULT_BASELINE, DEFAULT_SRC_ROOT,
+                                       run_analysis)
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr/HLO invariant engine + pool-ownership linter")
+    ap.add_argument("--mode", choices=("dense", "gather", "fused"),
+                    default=None,
+                    help="kernel mode (default: $REPRO_KERNEL_MODE or dense)")
+    ap.add_argument("--baseline", default=str(DEFAULT_BASELINE),
+                    help="waiver file (JSON: violation key -> reason)")
+    ap.add_argument("--src-root", default=str(DEFAULT_SRC_ROOT),
+                    help="tree the ownership linter audits")
+    ap.add_argument("--out", default=None,
+                    help="write the JSON report here instead of stdout")
+    ap.add_argument("--no-ownership", action="store_true",
+                    help="skip the AST linter (jaxpr/HLO passes only)")
+    args = ap.parse_args(argv)
+
+    report = run_analysis(mode=args.mode, src_root=args.src_root,
+                          baseline=args.baseline,
+                          with_ownership=not args.no_ownership)
+
+    text = report.to_json()
+    if args.out:
+        Path(args.out).write_text(text + "\n")
+    else:
+        print(text)
+
+    active = report.active
+    waived = sum(1 for v in report.violations if v.waived)
+    print(f"[repro.analysis] mode={report.kernel_mode} "
+          f"targets={len(report.targets_run)} passes={len(report.passes_run)} "
+          f"violations={len(active)} waived={waived}", file=sys.stderr)
+    for v in active:
+        loc = f" ({v.source})" if v.source else ""
+        print(f"  FAIL {v.pass_name}/{v.rule} @ {v.where}: "
+              f"{v.detail}{loc}", file=sys.stderr)
+    for k in report.unused_baseline:
+        print(f"  STALE baseline entry never matched: {k}", file=sys.stderr)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

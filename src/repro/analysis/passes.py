@@ -1,0 +1,186 @@
+"""Invariant passes over walked jaxprs / lowered HLO.
+
+Each pass is a named rule over one ``AnalysisTarget``; the registry is what
+``run_analysis`` iterates and what ``docs/design.md`` §3 catalogs.  Adding a
+pass = write a ``run(target) -> list[Violation]`` function and ``register``
+it — every registered target across the kernel-mode matrix gets it for
+free.
+
+Shipped passes:
+
+  no-dense-far-view : no intermediate of a target-forbidden shape — the
+      (B, n_pages, C) equality tensor anywhere, the batched far view
+      (B, n_pages*page, Hkv, hd) wherever the mode promises a walk instead
+      of a materialization.  Generalizes the PR-4/PR-5 jaxpr shape pin.
+  f32-accumulation  : every attention-read-path dot (a dot with a raw-KV
+      operand per the walker's taint lattice; ALL dots inside Pallas
+      kernels) must accumulate in f32 — output dtype f32/f64 (operand
+      dtypes or ``preferred_element_type``) or an immediate explicit cast.
+      Catches the PR-4 bf16 greedy-tie bug class statically.
+  no-host-sync      : no callback / infeed / outfeed primitives inside a
+      per-tick jitted step — one host round-trip per token would dominate
+      the decode clock.
+  vmem-budget       : every intermediate priced with the
+      ``launch.hlo_analysis`` dtype table must fit the 64 MiB budget
+      ``kernels.paged_gather`` enforces dynamically at call time — here the
+      same bound holds statically over ALL intermediates of the step.
+  no-collectives    : migration planning (the IST analogue) must lower to
+      pure on-device copies — its optimized HLO contains no collective ops
+      (the pin from tests/test_tiered_runtime.py).
+
+The pool-ownership AST linter lives in ``repro.analysis.ownership`` and is
+run by the runner alongside these jaxpr passes.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from repro.analysis import walker
+from repro.analysis.report import Violation
+from repro.analysis.targets import AnalysisTarget
+
+_F32 = ("float32", "float64")
+
+# Host-sync primitives: anything that escapes the device inside a step.
+_HOST_SYNC_PRIMS = ("callback", "infeed", "outfeed")
+
+
+@dataclass
+class InvariantPass:
+    name: str
+    doc: str
+    run: Callable[[AnalysisTarget], list]
+    applies: Callable[[AnalysisTarget], bool] = lambda t: True
+
+
+PASSES: list[InvariantPass] = []
+
+
+def register(name: str, doc: str, applies=lambda t: True):
+    def deco(fn):
+        PASSES.append(InvariantPass(name=name, doc=doc, run=fn,
+                                    applies=applies))
+        return fn
+    return deco
+
+
+@register("no-dense-far-view",
+          "no forbidden-shape intermediate (dense equality tensors, "
+          "materialized far views) anywhere in the jitted step",
+          applies=lambda t: bool(t.forbidden_shapes))
+def no_dense_far_view(target: AnalysisTarget) -> list[Violation]:
+    viols = []
+    banned = {fs.shape: fs for fs in target.forbidden_shapes}
+    seen = {}
+    for we in target.walk():
+        for a in we.out_avals:
+            shape = tuple(getattr(a, "shape", ()))
+            fs = banned.get(shape)
+            if fs is not None and shape not in seen:
+                seen[shape] = we
+                viols.append(Violation(
+                    pass_name="no-dense-far-view", rule=fs.rule,
+                    where=target.name,
+                    detail=f"intermediate of shape {shape}: {fs.reason}",
+                    source=we.source))
+    return viols
+
+
+def _dot_compliant(we: walker.WalkedEqn) -> bool:
+    in_dts = [str(getattr(a, "dtype", "")) for a in we.in_avals]
+    if not any(dt.startswith(("float", "bfloat")) for dt in in_dts):
+        return True                       # integer/bool dot: not our rule
+    out_dt = str(getattr(we.out_avals[0], "dtype", "")) \
+        if we.out_avals else ""
+    if out_dt in _F32:
+        return True                       # f32 operands or preferred f32
+    return we.cast_f32                    # explicit-cast accumulation idiom
+
+
+@register("f32-accumulation",
+          "attention-read-path dots (raw-KV operand, or any dot inside a "
+          "Pallas kernel) accumulate in f32")
+def f32_accumulation(target: AnalysisTarget) -> list[Violation]:
+    viols = []
+    seen = set()
+    for we in target.walk():
+        if we.prim != "dot_general":
+            continue
+        read_path = we.in_pallas or walker.TAINT_RAW in we.in_taints
+        if not read_path or _dot_compliant(we):
+            continue
+        shapes = "x".join(str(tuple(getattr(a, "shape", ())))
+                          for a in we.in_avals[:2])
+        out_dt = str(getattr(we.out_avals[0], "dtype", "?"))
+        detail = (f"read-path dot {shapes} accumulates in {out_dt} "
+                  f"(want f32 via preferred_element_type or explicit cast)")
+        key = (shapes, out_dt)
+        if key in seen:
+            continue
+        seen.add(key)
+        viols.append(Violation(
+            pass_name="f32-accumulation", rule="low-prec-dot",
+            where=target.name, detail=detail, source=we.source))
+    return viols
+
+
+@register("no-host-sync",
+          "no callback/infeed/outfeed primitives inside a per-tick step",
+          applies=lambda t: t.per_tick)
+def no_host_sync(target: AnalysisTarget) -> list[Violation]:
+    viols = []
+    seen = set()
+    for we in target.walk():
+        if any(tok in we.prim for tok in _HOST_SYNC_PRIMS) \
+                and we.prim not in seen:
+            seen.add(we.prim)
+            viols.append(Violation(
+                pass_name="no-host-sync", rule="host-primitive",
+                where=target.name,
+                detail=f"host-sync primitive `{we.prim}` in a per-tick "
+                       f"step", source=we.source))
+    return viols
+
+
+@register("vmem-budget",
+          "every intermediate fits the paged_gather 64 MiB VMEM budget")
+def vmem_budget(target: AnalysisTarget) -> list[Violation]:
+    from repro.kernels.paged_gather import DEFAULT_VMEM_BUDGET
+    from repro.launch.hlo_analysis import aval_bytes
+    viols = []
+    seen = set()
+    for we in target.walk():
+        for a in we.out_avals:
+            if a is None or not hasattr(a, "shape"):
+                continue
+            nbytes = aval_bytes(a)
+            if nbytes <= DEFAULT_VMEM_BUDGET:
+                continue
+            key = (tuple(a.shape), str(a.dtype))
+            if key in seen:
+                continue
+            seen.add(key)
+            viols.append(Violation(
+                pass_name="vmem-budget", rule="oversized-intermediate",
+                where=target.name,
+                detail=f"intermediate {tuple(a.shape)} {a.dtype} is "
+                       f"{nbytes} B > {DEFAULT_VMEM_BUDGET} B budget "
+                       f"(prim {we.prim})",
+                source=we.source))
+    return viols
+
+
+@register("no-collectives",
+          "migration planning lowers to pure on-device copies: optimized "
+          "HLO contains no collective ops",
+          applies=lambda t: t.check_collectives)
+def no_collectives(target: AnalysisTarget) -> list[Violation]:
+    present = walker.hlo_ops_present(target.hlo_text(), walker.COLLECTIVE_OPS)
+    return [Violation(
+        pass_name="no-collectives", rule="collective-op",
+        where=target.name,
+        detail=f"collective `{op}` in optimized HLO — migration must be "
+               f"channel-free on-device page copies")
+        for op in present]

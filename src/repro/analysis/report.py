@@ -1,0 +1,86 @@
+"""Violation records, reports, and the committed-baseline mechanism.
+
+A violation's identity must survive unrelated edits: baselines key on
+``pass:rule:where:detail`` (no line numbers), so an accepted finding stays
+waived until the offending construct itself moves or disappears.  Unused
+baseline entries are reported so stale waivers rot loudly, not silently.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+
+
+@dataclass
+class Violation:
+    """One invariant violation found by a pass."""
+    pass_name: str          # e.g. "f32-accumulation"
+    rule: str               # machine-readable sub-rule, e.g. "low-prec-dot"
+    where: str              # target name or "file.py::qualname"
+    detail: str             # stable human-readable description
+    source: str = ""        # best-effort "file:line" (NOT part of the key)
+    waived: bool = False    # matched a baseline entry
+
+    @property
+    def key(self) -> str:
+        return violation_key(self.pass_name, self.rule, self.where,
+                             self.detail)
+
+
+def violation_key(pass_name: str, rule: str, where: str, detail: str) -> str:
+    return f"{pass_name}:{rule}:{where}:{detail}"
+
+
+def load_baseline(path: str | Path) -> dict[str, str]:
+    """Baseline file: JSON object mapping violation keys -> reason strings.
+    Missing file means an empty baseline."""
+    p = Path(path)
+    if not p.exists():
+        return {}
+    data = json.loads(p.read_text())
+    waivers = data.get("waivers", data) if isinstance(data, dict) else {}
+    return {str(k): str(v) for k, v in waivers.items()}
+
+
+@dataclass
+class AnalysisReport:
+    """The full result of one analysis run."""
+    violations: list[Violation] = field(default_factory=list)
+    passes_run: list[str] = field(default_factory=list)
+    targets_run: list[str] = field(default_factory=list)
+    unused_baseline: list[str] = field(default_factory=list)
+    kernel_mode: str = ""
+
+    def apply_baseline(self, baseline: dict[str, str]) -> None:
+        used = set()
+        for v in self.violations:
+            if v.key in baseline:
+                v.waived = True
+                used.add(v.key)
+        self.unused_baseline = sorted(set(baseline) - used)
+
+    @property
+    def active(self) -> list[Violation]:
+        return [v for v in self.violations if not v.waived]
+
+    @property
+    def ok(self) -> bool:
+        return not self.active
+
+    def as_dict(self) -> dict:
+        return {
+            "ok": self.ok,
+            "kernel_mode": self.kernel_mode,
+            "passes_run": self.passes_run,
+            "targets_run": self.targets_run,
+            "n_violations": len(self.active),
+            "n_waived": sum(1 for v in self.violations if v.waived),
+            "violations": [asdict(v) | {"key": v.key}
+                           for v in self.violations],
+            "unused_baseline": self.unused_baseline,
+        }
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.as_dict(), indent=indent)

@@ -1,0 +1,55 @@
+"""Drive every invariant pass over every registered target + the ownership
+linter, apply the committed baseline, and produce an ``AnalysisReport``."""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.analysis.report import AnalysisReport, load_baseline
+
+# src/repro — the tree the ownership linter audits.
+DEFAULT_SRC_ROOT = Path(__file__).resolve().parents[1]
+# repo root — where the committed baseline lives.
+DEFAULT_BASELINE = Path(__file__).resolve().parents[3] / \
+    "analysis_baseline.json"
+
+
+def run_analysis(mode: str | None = None,
+                 src_root: str | Path | None = None,
+                 baseline: str | Path | dict | None = None,
+                 targets=None,
+                 with_ownership: bool = True) -> AnalysisReport:
+    """One full analysis run under one kernel mode.
+
+    mode: dense | gather | fused (default: $REPRO_KERNEL_MODE).
+    baseline: a waiver dict, a path to the baseline JSON, or None for the
+    committed ``analysis_baseline.json`` at the repo root.
+    targets: override the registry (tests plant broken mini-steps here).
+    """
+    from repro.analysis import passes as passes_mod
+    from repro.analysis import targets as targets_mod
+    from repro.analysis.ownership import lint_ownership
+
+    mode = mode or targets_mod.kernel_mode()
+    if targets is None:
+        targets = targets_mod.build_targets(mode)
+
+    report = AnalysisReport(kernel_mode=mode)
+    for p in passes_mod.PASSES:
+        report.passes_run.append(p.name)
+        for t in targets:
+            if p.applies(t):
+                report.violations.extend(p.run(t))
+    report.targets_run = [t.name for t in targets]
+
+    if with_ownership:
+        report.passes_run.append("pool-ownership")
+        report.violations.extend(
+            lint_ownership(src_root or DEFAULT_SRC_ROOT))
+
+    if baseline is None:
+        baseline = load_baseline(DEFAULT_BASELINE)
+    elif not isinstance(baseline, dict):
+        baseline = load_baseline(baseline)
+    report.apply_baseline(baseline)
+    return report

@@ -1,0 +1,224 @@
+"""The registered jitted step factories the invariant passes run over.
+
+One ``AnalysisTarget`` per jitted program the serving stack actually
+executes — the dense/gather/fused decode step, pool prefill, suffix
+prefill, the score walk, the scoring pass, the core read, and migration
+planning — built over a distinctive-dimension config matrix so forbidden
+shapes cannot collide with legitimate ones by accident:
+
+    B=5 slots, n_pages=7 pages/slot, C=3 near pages, page=8 tokens,
+    P=37 pool pages  =>  (B, n_pages, C)=(5,7,3) and the batched far view
+    (B, n_pages*page, Hkv, hd)=(5, 56, Hkv, hd) appear nowhere in a clean
+    trace.
+
+The kernel mode comes from ``REPRO_KERNEL_MODE`` (dense | gather | fused)
+— the same knob the CI test matrix uses — so one run of
+``python -m repro.analysis`` audits exactly one read-path configuration
+and CI fans out over all three.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import walker
+
+KERNEL_MODES = ("dense", "gather", "fused")
+
+# Distinctive dims (mirrors the retired private pin in test_fused_serving):
+# every forbidden shape below is reachable ONLY by rebuilding the construct
+# the pass bans.
+B, N_PAGES, C, PAGE = 5, 7, 3, 8
+POOL_PAGES = B * N_PAGES + 2          # 37
+MAX_LEN = N_PAGES * PAGE              # 56
+
+# Substrings of arg-tree key paths that hold raw KV bytes (pool / near /
+# far buffers, gathered prefix rows).  These seed the walker's RAW taint.
+KV_KEYS = ("pool_k", "pool_v", "near_k", "near_v", "far_k", "far_v")
+
+
+def kernel_mode() -> str:
+    mode = os.environ.get("REPRO_KERNEL_MODE", "dense").lower()
+    if mode not in KERNEL_MODES:
+        raise ValueError(f"REPRO_KERNEL_MODE={mode!r}: want one of "
+                         f"{KERNEL_MODES}")
+    return mode
+
+
+@dataclass
+class ForbiddenShape:
+    shape: tuple
+    rule: str                    # e.g. "b-npages-c" / "batched-far-view"
+    reason: str
+
+
+@dataclass
+class AnalysisTarget:
+    """One jitted program under analysis.
+
+    fn/args are traced lazily (``jaxpr`` memoizes); ``kv_keys`` substrings
+    and ``kv_args`` positional indices mark the raw-KV invars that seed the
+    taint lattice; ``forbidden_shapes`` parameterizes the no-dense-far-view
+    pass per target; ``check_collectives`` additionally compiles the target
+    and greps the optimized HLO for collective ops (the migration pin).
+    """
+    name: str
+    fn: Callable
+    args: tuple
+    kv_keys: tuple = KV_KEYS
+    kv_args: tuple = ()          # top-level positional args that ARE raw KV
+    forbidden_shapes: tuple = ()
+    per_tick: bool = True        # no-host-sync applies
+    check_collectives: bool = False
+    _jaxpr: object = field(default=None, repr=False)
+
+    def jaxpr(self):
+        if self._jaxpr is None:
+            self._jaxpr = jax.make_jaxpr(self.fn)(*self.args)
+        return self._jaxpr
+
+    def kv_invars(self) -> list[int]:
+        def is_kv(keystr: str) -> bool:
+            if any(k in keystr for k in self.kv_keys):
+                return True
+            for i in self.kv_args:
+                if keystr.startswith(f"[{i}]"):
+                    return True
+            return False
+        return walker.kv_invar_indices(self.args, is_kv)
+
+    def walk(self) -> list:
+        return walker.collect_eqns(self.jaxpr(), kv_invars=self.kv_invars())
+
+    def hlo_text(self) -> str:
+        return walker.lower_hlo_text(self.fn, *self.args)
+
+
+def _forbidden(arch, mode: str, read_path: bool) -> tuple:
+    """The shape bans for one target: the (B, n_pages, C) equality tensor is
+    banned everywhere (the PR-5 metadata-hoisting invariant); the batched
+    far view is banned only where the mode promises not to materialize it
+    (fused read paths, and metadata-only targets in every mode)."""
+    Hkv, hd = arch.n_kv_heads, arch.resolved_head_dim
+    bans = [ForbiddenShape(
+        (B, N_PAGES, C), "b-npages-c",
+        "per-layer (B, n_pages, C) equality tensor — read metadata must be "
+        "hoisted (computed once per step from the page tables)")]
+    if not read_path or mode == "fused":
+        bans.append(ForbiddenShape(
+            (B, N_PAGES * PAGE, Hkv, hd), "batched-far-view",
+            "batched far view (B, n_pages*page, Hkv, hd) — the fused path "
+            "must walk the page table, never materialize the far tier"))
+    return tuple(bans)
+
+
+def build_targets(mode: str | None = None) -> list[AnalysisTarget]:
+    """Trace the registered step factories under one kernel mode."""
+    from repro.configs.registry import ARCHS
+    from repro.core import tiered_kv as tkv
+    from repro.launch.serve import (make_paged_tiered_decode_step,
+                                    make_pool_prefill_step,
+                                    make_pool_suffix_prefill_step)
+    from repro.models import transformer
+
+    mode = mode or kernel_mode()
+    arch = ARCHS["qwen3-1.7b"].reduced()
+    params = transformer.init_params(jax.random.key(0), arch)
+    cfg = tkv.TieredKVConfig(page=PAGE, near_pages=C, policy="BBC",
+                             gather_kernel=(mode == "gather"),
+                             fused_kernel=(mode == "fused"))
+    L = arch.n_layers
+    Hkv, hd = arch.n_kv_heads, arch.resolved_head_dim
+    H = arch.n_heads
+
+    paged = tkv.init_paged_cache(cfg, B, N_PAGES, POOL_PAGES, Hkv, hd)
+    pos = jnp.full((B,), 2 * PAGE + 3, jnp.int32)
+    q = jnp.zeros((B, H, hd), jnp.float32)
+    targets: list[AnalysisTarget] = []
+
+    # 1. core two-tier read (the oracle / gather / fused read primitive)
+    targets.append(AnalysisTarget(
+        name="paged_attention_read",
+        fn=lambda c, qq, p: tkv.paged_tiered_attention(c, qq, p, cfg),
+        args=(paged, q, pos),
+        forbidden_shapes=_forbidden(arch, mode, read_path=True)))
+
+    # 2. full transformer decode step (pool-native cache, meta hoisted)
+    pools = {
+        "pos": pos,
+        "pool_k": jnp.zeros((L, POOL_PAGES, PAGE, Hkv, hd), jnp.bfloat16),
+        "pool_v": jnp.zeros((L, POOL_PAGES, PAGE, Hkv, hd), jnp.bfloat16),
+        "near_k": jnp.zeros((L, C * PAGE, Hkv, hd), jnp.bfloat16),
+        "near_v": jnp.zeros((L, C * PAGE, Hkv, hd), jnp.bfloat16),
+    }
+    meta = tkv.paged_step_metadata(paged, pos + 1, cfg, append_pos=pos)
+    batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    decode = make_paged_tiered_decode_step(arch, cfg)
+    targets.append(AnalysisTarget(
+        name="paged_decode_step",
+        fn=lambda c, b, m: decode(params, c, b, m),
+        args=(pools, batch, meta),
+        forbidden_shapes=_forbidden(arch, mode, read_path=True)))
+
+    # 3./4. pool prefill + shared-prefix suffix prefill (dense rows are a
+    # transient inside the step; only the pool survives)
+    prefill = make_pool_prefill_step(arch, MAX_LEN, PAGE)
+    pbatch = {"tokens": jnp.zeros((1, 16), jnp.int32)}
+    ids = jnp.arange(N_PAGES, dtype=jnp.int32)
+    targets.append(AnalysisTarget(
+        name="pool_prefill",
+        fn=lambda b, pk, pv, i: prefill(params, b, pk, pv, i),
+        args=(pbatch, pools["pool_k"], pools["pool_v"], ids),
+        kv_args=(1, 2),                        # pool buffers are positional
+        per_tick=False,
+        forbidden_shapes=(_forbidden(arch, mode, read_path=True)[0],)))
+
+    sfx = make_pool_suffix_prefill_step(arch, MAX_LEN, PAGE)
+    m_pre = 2                                  # matched shared-prefix pages
+    sbatch = {"tokens": jnp.zeros((1, 16), jnp.int32),
+              "positions": m_pre * PAGE
+              + jnp.arange(16, dtype=jnp.int32)[None]}
+    kpre = jnp.zeros((L, 1, m_pre * PAGE, Hkv, hd), jnp.bfloat16)
+    targets.append(AnalysisTarget(
+        name="suffix_prefill",
+        fn=lambda b, kp, vp, pk, pv, i: sfx(params, b, kp, vp, pk, pv, i),
+        args=(sbatch, kpre, kpre, pools["pool_k"], pools["pool_v"], ids),
+        kv_args=(1, 2, 3, 4),                  # prefix rows + pool buffers
+        per_tick=False,
+        forbidden_shapes=(_forbidden(arch, mode, read_path=True)[0],)))
+
+    # 5. score walk: pure page-table metadata — may touch NO KV bytes and
+    # build nothing far-view-shaped in any mode
+    targets.append(AnalysisTarget(
+        name="paged_score_walk",
+        fn=lambda c, p: tkv.paged_score_walk(c, p, cfg),
+        args=({"page_table": paged["page_table"]}, pos),
+        forbidden_shapes=_forbidden(arch, mode, read_path=False)))
+
+    # 6. scoring pass (per-page attention mass; fused mode walks, dense
+    # mode materializes the oracle view)
+    targets.append(AnalysisTarget(
+        name="paged_page_masses",
+        fn=lambda qq, c, p: tkv.paged_page_masses(qq, c, p, cfg),
+        args=(q, paged, pos),
+        forbidden_shapes=_forbidden(arch, mode, read_path=True)))
+
+    # 7. monolithic migration planning — the IST analogue: pure on-device
+    # page copies, asserted collective-free in optimized HLO (the pin from
+    # tests/test_tiered_runtime.py, now routed through the framework)
+    mono_cfg = tkv.TieredKVConfig(page=PAGE, near_pages=C, policy="BBC")
+    kc = jnp.zeros((B, MAX_LEN, Hkv, hd), jnp.bfloat16)
+    mono = tkv.init_tiered_cache(kc, kc, mono_cfg)
+    targets.append(AnalysisTarget(
+        name="plan_and_migrate",
+        fn=lambda c, qq, p: tkv.plan_and_migrate(c, qq, p, mono_cfg),
+        args=(mono, q, pos),
+        check_collectives=True,
+        forbidden_shapes=(_forbidden(arch, mode, read_path=False)[0],)))
+
+    return targets

@@ -28,6 +28,8 @@ Validated against analytic 6ND in tests/test_hlo_analysis.py.
 from __future__ import annotations
 
 import re
+
+import numpy as np
 from collections import defaultdict
 from dataclasses import dataclass, field
 
@@ -36,6 +38,49 @@ _DTYPE_BYTES = {
     "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
     "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
 }
+
+# numpy/JAX dtype name -> HLO shape-string dtype name.  One byte table
+# (above) serves both the HLO-text parser and aval-level byte accounting
+# (the repro.analysis vmem-budget pass) so the two can never drift.
+_NUMPY_TO_HLO = {
+    "bool": "pred", "int8": "s8", "uint8": "u8", "int16": "s16",
+    "uint16": "u16", "float16": "f16", "bfloat16": "bf16", "int32": "s32",
+    "uint32": "u32", "float32": "f32", "int64": "s64", "uint64": "u64",
+    "float64": "f64", "complex64": "c64", "complex128": "c128",
+    "float8_e4m3fn": "f8e4m3fn", "float8_e5m2": "f8e5m2",
+}
+
+DTYPE_BYTES = dict(_DTYPE_BYTES)   # public view of the byte table
+
+
+def hlo_dtype_name(dtype) -> str:
+    """HLO shape-string name ('f32', 'bf16', ...) of a numpy/JAX dtype
+    (np.dtype instances, scalar types like ``jnp.bfloat16``, or the HLO
+    name itself)."""
+    try:
+        name = np.dtype(dtype).name
+    except TypeError:
+        name = getattr(dtype, "name", None) or str(dtype)
+    if name in _DTYPE_BYTES:
+        return name
+    try:
+        return _NUMPY_TO_HLO[name]
+    except KeyError:
+        raise ValueError(f"no HLO dtype name for {dtype!r}") from None
+
+
+def dtype_bytes(dtype) -> int:
+    """Bytes per element of a numpy/JAX dtype, via the HLO byte table."""
+    return _DTYPE_BYTES[hlo_dtype_name(dtype)]
+
+
+def aval_bytes(aval) -> int:
+    """Total bytes of a shaped value (ShapedArray / ShapeDtypeStruct /
+    ndarray): prod(shape) * dtype_bytes."""
+    n = 1
+    for d in aval.shape:
+        n *= int(d)
+    return n * dtype_bytes(aval.dtype)
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _INSTR_RE = re.compile(

@@ -114,6 +114,22 @@ class TestHLOAnalysis:
         s = hlo_analysis.analyze_module(hlo)
         assert s.coll_wire_bytes == pytest.approx(2 * 0.75 * 400)
 
+    def test_aval_byte_estimates(self):
+        """The numpy-side dtype table (shared with the repro.analysis
+        vmem-budget pass) agrees with the HLO-side one: a hand-computed
+        batched far view — (5, 296, 4, 64) bf16 — prices identically
+        through both entry points."""
+        a = jax.ShapeDtypeStruct((5, 296, 4, 64), jnp.bfloat16)
+        assert hlo_analysis.aval_bytes(a) == 5 * 296 * 4 * 64 * 2
+        assert hlo_analysis.dtype_bytes(jnp.bfloat16) == \
+            hlo_analysis._DTYPE_BYTES[hlo_analysis.hlo_dtype_name(
+                jnp.bfloat16)] == 2
+        assert hlo_analysis.hlo_dtype_name(np.dtype("float32")) == "f32"
+        assert hlo_analysis.aval_bytes(
+            jax.ShapeDtypeStruct((), jnp.int32)) == 4
+        with pytest.raises(ValueError):
+            hlo_analysis.hlo_dtype_name("not-a-dtype")
+
 
 class TestPipeline:
     def test_bubble_fraction(self):

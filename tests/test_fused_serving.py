@@ -142,27 +142,15 @@ class TestMetadataHoisting:
         assert len(calls) == rep.steps, \
             f"metadata computed {len(calls)}x for {rep.steps} decode steps"
 
-    def _shapes_in(self, jaxpr, acc):
-        for eqn in jaxpr.eqns:
-            for v in eqn.outvars:
-                if hasattr(v, "aval") and hasattr(v.aval, "shape"):
-                    acc.add(tuple(v.aval.shape))
-            for val in eqn.params.values():
-                for sub in jax.tree_util.tree_leaves(
-                        val, is_leaf=lambda x: isinstance(
-                            x, (jax.extend.core.Jaxpr,
-                                jax.extend.core.ClosedJaxpr))):
-                    if isinstance(sub, jax.extend.core.ClosedJaxpr):
-                        self._shapes_in(sub.jaxpr, acc)
-                    elif isinstance(sub, jax.extend.core.Jaxpr):
-                        self._shapes_in(sub, acc)
-        return acc
-
     def test_no_b_npages_c_intermediate_in_per_layer_trace(self):
         """jaxpr pin: with distinctive (B, n_pages, C) = (5, 7, 3), no
         intermediate of that shape may appear anywhere in the fused decode
         step OR in the dense read path (both now derive masks from the
-        hoisted scatter-built metadata)."""
+        hoisted scatter-built metadata).  Routed through the shared
+        ``repro.analysis`` walker (the old private ``_shapes_in`` helper);
+        ``python -m repro.analysis`` additionally enforces the same ban
+        over the whole target registry (no-dense-far-view pass)."""
+        from repro.analysis import intermediate_shapes
         arch, params = _arch_params()
         B, n_pages, C, page = 5, 7, 3, 8
         P = B * n_pages + 2
@@ -178,7 +166,7 @@ class TestMetadataHoisting:
         jx = jax.make_jaxpr(
             lambda c, q, p: tkv.paged_tiered_attention(c, q, p, dense_tier)
         )(paged, q, pos)
-        shapes = self._shapes_in(jx.jaxpr, set())
+        shapes = intermediate_shapes(jx)
         assert bad not in shapes, \
             f"dense read path still builds a {bad} equality tensor"
 
@@ -201,7 +189,7 @@ class TestMetadataHoisting:
         jx2 = jax.make_jaxpr(
             lambda c, b, m: transformer.paged_decode_step(
                 params, c, b, arch, m))(cache, batch, meta)
-        shapes2 = self._shapes_in(jx2.jaxpr, set())
+        shapes2 = intermediate_shapes(jx2)
         assert bad not in shapes2, \
             f"per-layer fused trace contains a {bad} intermediate"
         # the metadata itself enters the trace — as small 2-D inputs

@@ -45,12 +45,32 @@ def _arch_params(seed=0):
 
 class TestDenseMasterIsGone:
     def test_refresh_pool_from_slots_absent_from_src(self):
-        """Acceptance (grep-provable): the slots->pool refresh pass cannot
-        exist when the pool is the only store."""
-        src = pathlib.Path(__file__).resolve().parents[1] / "src"
-        hits = [str(p) for p in src.rglob("*.py")
-                if "refresh_pool_from_slots" in p.read_text()]
-        assert not hits, f"dense-master refresh still referenced: {hits}"
+        """Acceptance: the slots->pool refresh pass cannot exist when the
+        pool is the only store.  The old text grep is now the ownership
+        linter's deny-list (``repro.analysis.ownership``): the AST pass
+        must report zero deny-list hits over ``src/``."""
+        from repro.analysis.ownership import lint_ownership
+        src = pathlib.Path(__file__).resolve().parents[1] / "src" / "repro"
+        hits = [v for v in lint_ownership(src) if v.rule == "deny-list"]
+        assert not hits, f"dense-master refresh still referenced: " \
+                         f"{[(v.where, v.detail) for v in hits]}"
+
+    def test_deny_list_covers_refresh_pool_from_slots(self):
+        """The deny-list actually bans the API this pin retired — and the
+        linter actually fires on a planted resurrection (the pin is not a
+        tautology)."""
+        import textwrap
+        from repro.analysis.ownership import DENY_APIS, lint_ownership
+        assert "refresh_pool_from_slots" in DENY_APIS
+        import tempfile
+        with tempfile.TemporaryDirectory() as td:
+            planted = pathlib.Path(td) / "resurrected.py"
+            planted.write_text(textwrap.dedent("""
+                def refresh_pool_from_slots(pool, slots):
+                    return pool
+            """))
+            hits = [v for v in lint_ownership(td) if v.rule == "deny-list"]
+        assert len(hits) == 1 and "refresh_pool_from_slots" in hits[0].detail
 
     def test_paged_decode_cache_has_no_dense_kv_leaves(self):
         """The engine's decode cache pytree carries pool/near leaves only."""

@@ -67,17 +67,21 @@ class TestTieredKV:
 
     def test_migration_emits_no_collectives(self):
         """IST analogue: the migration program must contain zero collective
-        ops (the paper's channel-free property)."""
+        ops (the paper's channel-free property).  Routed through the shared
+        ``repro.analysis`` HLO helpers; ``python -m repro.analysis``
+        enforces the same pin on the registered migration target
+        (no-collectives pass)."""
+        from repro.analysis.walker import (COLLECTIVE_OPS, hlo_ops_present,
+                                           lower_hlo_text)
         cache, cfg = _mk_cache()
         B, T, Hkv, hd = cache["far_k"].shape
         q = jnp.ones((B, Hkv * 2, hd), jnp.float32)
         pos = jnp.asarray(T - 1, jnp.int32)
-        hlo = jax.jit(
-            lambda c, q, p: tkv.plan_and_migrate(c, q, p, cfg)
-        ).lower(cache, q, pos).compile().as_text()
-        for op in ("all-reduce", "all-gather", "all-to-all",
-                   "collective-permute", "reduce-scatter"):
-            assert op not in hlo, f"migration HLO contains {op}"
+        hlo = lower_hlo_text(
+            lambda c, q, p: tkv.plan_and_migrate(c, q, p, cfg),
+            cache, q, pos)
+        present = hlo_ops_present(hlo, COLLECTIVE_OPS)
+        assert not present, f"migration HLO contains {present}"
 
     def test_append_token(self):
         cache, cfg = _mk_cache()
