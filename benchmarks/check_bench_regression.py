@@ -6,6 +6,9 @@ Fails when, for any (scenario, policy) cell present in both files:
   * modeled throughput (``tok/kcost_modeled`` — the deterministic,
     machine-independent tokens-per-cost column) regresses by more than
     ``--tol`` (default 10%), or
+  * modeled ``p99_lat`` or ``p50_ttft`` GROWS by more than ``--tol``
+    (lower is better — the ISSUE 8 tail-latency wins are gated, not just
+    reported), or
   * ``kv_bytes_live`` grows AT ALL (any memory growth is a regression:
     the pool-native engine's whole point is that live KV tracks demand).
 
@@ -49,6 +52,13 @@ def compare(old: dict, new: dict, tol: float = 0.10,
             failures.append(
                 f"{key}: modeled throughput {n_thr:.3f} < "
                 f"{(1 - tol):.0%} of committed {o_thr:.3f}")
+        for col in ("p99_lat", "p50_ttft"):     # modeled, deterministic;
+            o_lat = float(o.get(col, 0.0))      # LOWER is better (unlike
+            n_lat = float(n.get(col, 0.0))      # the throughput columns)
+            if o_lat > 0 and n_lat > o_lat * (1.0 + tol):
+                failures.append(
+                    f"{key}: {col} {n_lat:.1f} > "
+                    f"{(1 + tol):.0%} of committed {o_lat:.1f}")
         if "kv_bytes_live" in o:       # absent in pre-ISSUE-5 baselines
             o_kv = int(o["kv_bytes_live"])
             n_kv = int(n.get("kv_bytes_live", 0))

@@ -1,7 +1,9 @@
 """Serving-engine scenario suite (the serving twin of the paper's Fig 8).
 
-Five arrival scenarios x four tier policies through the continuous-batching
-engine (`repro.serve`), reporting per cell:
+Six arrival scenarios x four tier policies through the continuous-batching
+engine (`repro.serve`) — the matrix runs the engine the way it is meant to
+be deployed since ISSUE 8: prefix cache ON, chunked admission prefill ON,
+migration overlapped — reporting per cell:
 
   tokens/s (wall)       : aggregate decode throughput, post-compile.
   tokens/kcost          : modeled-byte-cost throughput (near pages streamed,
@@ -27,11 +29,17 @@ Plus two acceptance cells:
       rows touched == the sum of live non-promoted page rows (device walk
       accounting == independent host shadow), never ``n_pages*page*B``.
   pool_native : pool-as-single-source-of-truth memory (ISSUE 5
-      acceptance): peak live KV bytes (referenced pool pages + near
-      copies) <= 0.6x the dense-equivalent per-slot master on the
-      shared_system_prompt and long_context_summarize traces, with zero
-      orphaned pages (the engine's shutdown refcount sweep runs inside
-      every cell).
+      acceptance): peak live KV bytes (referenced pool pages; near-tier
+      copies are derived duplicates, reported separately) <= 0.6x the
+      dense-equivalent per-slot master on the shared_system_prompt and
+      long_context_summarize traces, with zero orphaned pages (the
+      engine's shutdown refcount sweep runs inside every cell).
+  chunked_prefill : ISSUE 8 acceptance — budgeted chunked admission
+      prefill + overlapped migration vs the synchronous engine on the
+      two stall-dominated traces (bursty, long_context_stragglers):
+      emitted tokens bit-identical, and modeled p99 token latency AND
+      p50 TTFT both improve >= 25% (the long-prompt admission stall no
+      longer lands inside in-flight requests' inter-token gaps).
 
 ``run_all`` also emits **BENCH_serving.json** (tokens/s, p50/p99 latency,
 TTFT, far-rows-touched, live-KV-bytes per cell) so the bench trajectory
@@ -64,12 +72,27 @@ def _setup(arch_name="qwen3-1.7b", seed=0):
 
 
 def _config(policy: str, n_slots=6, max_len=128, page=16, near_pages=2,
-            interval=4, share=False, fused=False) -> ServingConfig:
+            interval=4, share=False, fused=False, chunk=None,
+            overlap=False) -> ServingConfig:
     tier = TieredKVConfig(page=page, near_pages=near_pages,
                           interval=interval, policy=policy,
                           fused_kernel=fused)
     return ServingConfig(n_slots=n_slots, max_len=max_len,
-                         prefill_bucket=16, tier=tier, share_prefix=share)
+                         prefill_bucket=16, tier=tier, share_prefix=share,
+                         prefill_chunk_tokens=chunk,
+                         overlap_migration=overlap)
+
+
+# The matrix's deployment config (ISSUE 8): radix prefix cache on (the
+# shared-prefix scenarios must show non-zero hit rates — the old matrix ran
+# share=False and pinned a 0.0 column for every cell), chunked admission
+# prefill, migration on the background lane.
+MATRIX_CHUNK = 96
+
+
+def _matrix_config(policy: str, fused=False) -> ServingConfig:
+    return _config(policy, share=True, fused=fused, chunk=MATRIX_CHUNK,
+                   overlap=True)
 
 
 def _traces(vocab: int):
@@ -79,11 +102,20 @@ def _traces(vocab: int):
         "bursty": SCENARIOS["bursty"](
             vocab, n_requests=12, prompt_len=24, max_new_tokens=16,
             burst=4, burst_gap=16),
+        # gap=0 floods the queue (the post-ISSUE-8 trace fix): every
+        # request arrives at once, so the median request waits behind the
+        # stragglers' full-prompt prefills — the regime the chunked lane
+        # exists for.  The old gap=2 let every arrival find a free slot
+        # and its own prefill was the whole TTFT, hiding the admission
+        # stall from the p50 columns entirely.
         "long_context_stragglers": SCENARIOS["long_context_stragglers"](
             vocab, n_requests=10, prompt_len=16, max_new_tokens=12,
-            straggler_every=4, long_factor=4),
+            straggler_every=4, long_factor=4, gap=0),
         "shifting_hotspot": SCENARIOS["shifting_hotspot"](
             vocab, n_requests=12, prompt_len=24, max_new_tokens=16, gap=1),
+        "shared_system_prompt": SCENARIOS["shared_system_prompt"](
+            vocab, n_requests=12, sys_len=64, user_len=16,
+            max_new_tokens=12, gap=2),
         "long_context_summarize": SCENARIOS["long_context_summarize"](
             vocab, n_requests=8, doc_len=96, question_len=16,
             max_new_tokens=16, gap=2),
@@ -92,12 +124,12 @@ def _traces(vocab: int):
 
 def bench_scenarios(arch_name="qwen3-1.7b", policies=POLICIES):
     """All scenarios x all policies.  One engine per policy (the jitted
-    decode/plan programs are shared across its four scenario runs)."""
+    decode/plan programs are shared across its six scenario runs)."""
     arch, params = _setup(arch_name)
     traces = _traces(arch.vocab)
     rows = []
     for policy in policies:
-        eng = ServingEngine(params, arch, _config(policy))
+        eng = ServingEngine(params, arch, _matrix_config(policy))
         for name, trace in traces.items():
             eng.run(trace, "warmup")    # compile this cell's shapes
                                         # (prefill buckets differ by
@@ -258,12 +290,65 @@ def bench_pool_native(arch_name="qwen3-1.7b", policy="BBC"):
     ]
 
 
+def bench_chunked_prefill(arch_name="qwen3-1.7b", policy="BBC",
+                          chunk=MATRIX_CHUNK):
+    """ISSUE 8 acceptance cell: chunked admission prefill + overlapped
+    migration vs the synchronous engine on the two stall-dominated traces.
+    The overlap must not change a single emitted token (the chunk-resume
+    step is bit-identical to one-shot prefill and the scheduler change is
+    pure timing), while modeled p99 token latency and p50 TTFT both drop
+    >= 25%: admission prefills no longer land whole inside in-flight
+    requests' inter-token gaps, and queued requests stop serializing
+    behind full-prompt prefills."""
+    arch, params = _setup(arch_name)
+    traces = _traces(arch.vocab)
+    out = []
+    for name in ("bursty", "long_context_stragglers"):
+        trace = traces[name]
+        sync_eng = ServingEngine(params, arch, _config(policy))
+        over_eng = ServingEngine(params, arch,
+                                 _config(policy, chunk=chunk, overlap=True))
+        sync_eng.run(trace, "warmup")
+        sync = sync_eng.run(trace, name)
+        over_eng.run(trace, "warmup")
+        over = over_eng.run(trace, name)
+        assert sync.outputs == over.outputs, \
+            f"{name}: chunked prefill changed emitted tokens"
+        p99_gain = 1.0 - over.p99_lat / sync.p99_lat
+        ttft_gain = 1.0 - over.p50_ttft / sync.p50_ttft
+        assert p99_gain >= 0.25, \
+            f"{name}: p99 latency only improved {p99_gain:.0%} " \
+            f"({sync.p99_lat:.0f} -> {over.p99_lat:.0f})"
+        assert ttft_gain >= 0.25, \
+            f"{name}: p50 TTFT only improved {ttft_gain:.0%} " \
+            f"({sync.p50_ttft:.0f} -> {over.p50_ttft:.0f})"
+        out += [
+            ("chunked_prefill", f"{name}_outputs_identical", True),
+            ("chunked_prefill", f"{name}_p99_lat_sync",
+             round(sync.p99_lat, 1)),
+            ("chunked_prefill", f"{name}_p99_lat_chunked",
+             round(over.p99_lat, 1)),
+            ("chunked_prefill", f"{name}_p99_gain", round(p99_gain, 3)),
+            ("chunked_prefill", f"{name}_p50_ttft_sync",
+             round(sync.p50_ttft, 1)),
+            ("chunked_prefill", f"{name}_p50_ttft_chunked",
+             round(over.p50_ttft, 1)),
+            ("chunked_prefill", f"{name}_ttft_gain", round(ttft_gain, 3)),
+            ("chunked_prefill", f"{name}_prefill_chunks",
+             over.prefill_chunks),
+            ("chunked_prefill", f"{name}_migration_deferrals",
+             over.migration_deferrals),
+        ]
+    return out
+
+
 def run_all(out_path: str | None = "BENCH_serving.json"):
     rows = [ServingReport.HEADER] + bench_scenarios()
     rows += bench_continuous_vs_sequential()
     rows += bench_prefix_sharing()
     rows += bench_fused_kernel()
     rows += bench_pool_native()
+    rows += bench_chunked_prefill()
     for r in rows:
         print(",".join(str(x) for x in r))
     if out_path:

@@ -178,6 +178,8 @@ def build_targets(mode: str | None = None) -> list[AnalysisTarget]:
         per_tick=False,
         forbidden_shapes=(_forbidden(arch, mode, read_path=True)[0],)))
 
+    from repro.launch.serve import make_pool_chunk_prefill_step
+
     sfx = make_pool_suffix_prefill_step(arch, MAX_LEN, PAGE)
     m_pre = 2                                  # matched shared-prefix pages
     sbatch = {"tokens": jnp.zeros((1, 16), jnp.int32),
@@ -189,6 +191,26 @@ def build_targets(mode: str | None = None) -> list[AnalysisTarget]:
         fn=lambda b, kp, vp, pk, pv, i: sfx(params, b, kp, vp, pk, pv, i),
         args=(sbatch, kpre, kpre, pools["pool_k"], pools["pool_v"], ids),
         kv_args=(1, 2, 3, 4),                  # prefix rows + pool buffers
+        per_tick=False,
+        forbidden_shapes=(_forbidden(arch, mode, read_path=True)[0],)))
+
+    # 4b. chunk-resumable admission prefill (ISSUE 8): resumes from a
+    # mid-prompt cursor — the prefix rows are gathered from the pool
+    # INSIDE the step (one program: gather + suffix prefill + scatter), so
+    # the pass set proves the chunked lane adds no host syncs and no
+    # dense-far-view rebuild beyond the transient the prefill owns
+    chunk = make_pool_chunk_prefill_step(arch, MAX_LEN, PAGE)
+    t_pre = 2 * PAGE + 3                       # cursor mid-page on purpose
+    chbatch = {"tokens": jnp.zeros((1, 16), jnp.int32),
+               "positions": t_pre
+               + jnp.arange(16, dtype=jnp.int32)[None]}
+    pre_ids = jnp.arange(3, dtype=jnp.int32)   # ceil(t_pre/PAGE) pages
+    targets.append(AnalysisTarget(
+        name="chunk_prefill",
+        fn=lambda b, pk, pv, pi, i: chunk(params, b, pk, pv, pi, i,
+                                          t_pre=t_pre),
+        args=(chbatch, pools["pool_k"], pools["pool_v"], pre_ids, ids),
+        kv_args=(1, 2),
         per_tick=False,
         forbidden_shapes=(_forbidden(arch, mode, read_path=True)[0],)))
 

@@ -98,6 +98,43 @@ def make_pool_suffix_prefill_step(arch: ArchConfig, max_len: int, page: int):
     return prefill_step
 
 
+def make_pool_chunk_prefill_step(arch: ArchConfig, max_len: int, page: int):
+    """Chunk-resumable admission prefill (ISSUE 8): one jitted program
+    resumes a prompt's prefill from a saved ``(pos, kv-rows-written)``
+    cursor ``t_pre`` — it gathers the ``ceil(t_pre/page)`` already-written
+    pool pages, slices them to exactly ``t_pre`` rows (a cursor mid-page is
+    fine: the boundary page's tail past the cursor is pad garbage from the
+    previous chunk and is discarded here, then rewritten below), runs the
+    suffix-prefill leg of ``transformer.prefill`` over the chunk with
+    absolute positions, and scatters the covered pages back into the pool.
+    Rewriting the boundary page is an identity for rows below the cursor
+    (those cache rows ARE the gathered pool bytes), so valid-row coverage
+    grows monotonically and the final cache rows are bit-identical to a
+    one-shot prefill — the same pinned property the shared-prefix suffix
+    path relies on.
+
+    ``t_pre`` must be static (it sizes the prefix slice): jit with
+    ``static_argnames=("t_pre",)``.  ``prefix_ids`` are the pool pages
+    holding rows ``[0, t_pre)``; ``ids`` is the full ``(n_pages,)`` scatter
+    vector with -1 outside the chunk's pages.  Returns
+    (logits, pool_k, pool_v) — logits row ``n-1`` of an S-completing chunk
+    seeds the first decode token."""
+    def chunk_step(params, batch, pool_k, pool_v, prefix_ids, ids,
+                   t_pre: int):
+        k = pool_k[:, prefix_ids]
+        L, m, _, Hkv, hd = k.shape
+        k_pre = k.reshape(L, 1, m * page, Hkv, hd)[:, :, :t_pre]
+        v_pre = pool_v[:, prefix_ids].reshape(
+            L, 1, m * page, Hkv, hd)[:, :, :t_pre]
+        logits, pcache = transformer.prefill(params, batch, arch,
+                                             max_len=max_len,
+                                             prefix_kv=(k_pre, v_pre))
+        pool_k, pool_v = _scatter_prompt_pages(
+            pool_k, pool_v, pcache["k"][:, 0], pcache["v"][:, 0], ids, page)
+        return logits, pool_k, pool_v
+    return chunk_step
+
+
 def make_sparse_tiered_decode_step(arch: ArchConfig, near_pages: int = 8,
                                    page: int = 128, window: int = 1024,
                                    tier_cfg: TieredKVConfig | None = None):

@@ -26,26 +26,45 @@ bit-identically.  The near tier is global: a hot shared page is scored by
 the aggregate attention mass of every referencing sequence and promoted
 ONCE for all tenants — the paper's one-IST-many-accesses economics.
 
-Scheduler loop (``ServingEngine.run``):
+Scheduler loop (``ServingEngine.run``; docs/design.md §2g for the
+ISSUE 8 overlapped-tick pipeline):
 
   admit    : pop arrived requests into free slots — match the prompt
-             against the radix prefix cache, map shared pages, prefill the
-             suffix straight into fresh pool pages (one jitted program),
-             seed the first token.
+             against the radix prefix cache, map shared pages, and either
+             prefill the suffix straight into fresh pool pages (one
+             jitted program) and seed the first token (synchronous mode),
+             or, with ``prefill_chunk_tokens`` set, enqueue a
+             ``_PrefillJob`` — pages allocated now, NO prefill compute:
+             the prompt fills in over later ticks' chunk budgets.
+  prefill  : (chunked mode) advance pending jobs FIFO up to the tick
+             budget (halved while active slots exceed half the pool),
+             each job resuming from its saved cursor into its own pages
+             via the chunk-resume step — bit-identical rows to a one-shot
+             prefill.  Chunk tokens piggyback on the decode tick's cost
+             (per-token only, no second step_overhead); a pending slot's
+             device page-table row stays -1, so the decode lane treats it
+             exactly like a free slot until the job completes.
   decode   : ONE batched ``transformer.paged_decode_step`` with per-slot
              ``pos`` emits a token for every active slot, appending K/V
              through the page table into the pool — via the fused
              page-table-walking kernel (``tier.fused_kernel``) or the
              materializing oracle path (bit-identical logits to the
              retired PR-4 dense-master path).
-  maintain : every ``tier.interval`` steps, score per-page attention mass
-             with the step's layer-0 queries (pool-natively — the fused
-             mode scores through `kernels.paged_masses`, no far-view
-             gather), aggregate it onto pool pages, and run the configured
-             policy (SC/WMC/BBC via ``paged_plan_and_migrate``; STATIC
-             pins each slot once at its first interval) — the amortized
-             IST.  Mapping changes re-derive the per-layer near buffers
-             from the pool (``refresh_near_from_pool``).
+  maintain : every ``tier.interval`` decode steps, score per-page
+             attention mass with the step's layer-0 queries
+             (pool-natively — the fused mode scores through
+             `kernels.paged_masses`, no far-view gather), aggregate it
+             onto pool pages, and run the configured policy (SC/WMC/BBC
+             via ``paged_plan_and_migrate``; STATIC pins each slot once
+             at its first interval) — the amortized IST.  The pass is
+             cost-aware for ALL policies: while the run queue is hot
+             (pending chunks or waiting arrivals) it defers, at most
+             ``defer_limit`` passes in a row.  Mapping changes re-derive
+             the per-layer near buffers from the pool
+             (``refresh_near_from_pool``); with ``overlap_migration`` the
+             copies land in a shadow buffer swapped at the next tick
+             boundary, and migration bytes bill a background lane that
+             stalls the clock only when saturated.
   retire   : finished sequences release their page refs; pages at refcount
              zero are freed unless the prefix cache retains them for
              re-arrivals.  At run end a refcount sweep asserts ZERO
@@ -104,6 +123,25 @@ class ServingConfig:
     verify_tiered_read: bool = False   # probe paged tiered read vs
                                        # attention over the materialized
                                        # pool view at every planning pass
+    # -- overlap knobs (ISSUE 8 tentpole) ------------------------------------
+    prefill_chunk_tokens: int | None = None
+                                  # budget of admission-prefill tokens run
+                                  # per tick, interleaved with the batched
+                                  # decode step (Sarathi-style chunked
+                                  # prefill).  None = legacy synchronous
+                                  # admission: the whole prompt prefills
+                                  # inside the admitting tick and every
+                                  # in-flight request stalls behind it.
+    overlap_migration: bool = False
+                                  # charge migration bytes to a background
+                                  # lane that only adds latency when
+                                  # saturated, and double-buffer the near
+                                  # tier (promotion copies land in a shadow
+                                  # buffer, swapped at the tick boundary)
+    defer_limit: int = 2          # cost-aware deferral gate (the WMC
+                                  # queue-idle gate generalized to all four
+                                  # policies): consecutive planning passes
+                                  # skippable while the run queue is hot
 
 
 @dataclass
@@ -111,6 +149,22 @@ class _Slot:
     req: Request
     emitted: list
     last_emit: float              # modeled clock of the last emitted token
+
+
+@dataclass
+class _PrefillJob:
+    """A chunk-resumable admission prefill in flight: pages are allocated
+    (and refcounted — real bytes) up front, the cursor tracks prompt rows
+    already written to the pool, and the slot's device page table stays
+    unmapped until completion so decode appends sentinel-drop and
+    scoring/planning ignore the slot, exactly like a free one."""
+    req: Request
+    prompt: np.ndarray            # (S,) int32
+    S: int
+    row: list                     # full page mapping (matched + fresh)
+    n_need: int
+    matched: int                  # prompt tokens served by the prefix cache
+    cursor: int                   # prompt rows already written to the pool
 
 
 class ServingEngine:
@@ -138,7 +192,12 @@ class ServingEngine:
             "pool must at least cover the slot pool"
         P = self.pool_pages
 
+        if cfg.prefill_chunk_tokens is not None:
+            assert cfg.prefill_chunk_tokens >= tier_cfg.page, \
+                "prefill_chunk_tokens must cover at least one page"
+
         from repro.launch.serve import (make_paged_tiered_decode_step,
+                                        make_pool_chunk_prefill_step,
                                         make_pool_prefill_step,
                                         make_pool_suffix_prefill_step)
         self._decode = jax.jit(make_paged_tiered_decode_step(arch, tier_cfg))
@@ -188,6 +247,11 @@ class ServingEngine:
             make_pool_prefill_step(arch, cfg.max_len, tier_cfg.page))
         self._prefill_sfx = jax.jit(
             make_pool_suffix_prefill_step(arch, cfg.max_len, tier_cfg.page))
+        # chunk-resumable admission prefill: t_pre (the cursor) is static —
+        # it sizes the in-jit prefix slice; jit caches per (t_pre, s_pad)
+        self._prefill_chunk = jax.jit(
+            make_pool_chunk_prefill_step(arch, cfg.max_len, tier_cfg.page),
+            static_argnames=("t_pre",))
         page = tier_cfg.page
 
         def gather_prefix(pool_k, pool_v, ids):
@@ -201,37 +265,45 @@ class ServingEngine:
 
     # -- admission ----------------------------------------------------------
 
-    def _admit(self, req: Request, slot: int, clock: float) -> float:
+    def _map_request(self, req: Request):
+        """The mapping steps shared by both admission paths.
+
+        1. prefix match: reuse already-written pool pages (refcount++).
+           match() caps at (S-1)//page pages <= n_need - 1, so at least
+           one fresh page always remains for the suffix.
+        2. map ONLY the pages this request can ever touch onto fresh pages
+           (evicting LRU cached-idle pages under pressure; their tier
+           state resets): prefill writes [0, S), decode appends reach at
+           most S + max_new - 2 (the final emitted token is never
+           appended) — live KV bytes track demand."""
         cfg = self.cfg
         page = cfg.tier.page
         prompt = np.asarray(req.prompt, np.int32)
         S = int(prompt.shape[0])
         assert S + req.max_new_tokens <= cfg.max_len, \
             f"request {req.rid} does not fit max_len={cfg.max_len}"
-        # map ONLY the pages this request can ever touch: prefill writes
-        # [0, S), decode appends reach at most S + max_new - 2 (the final
-        # emitted token is never appended) — live KV bytes track demand
         n_need = max(1, -(-(S + req.max_new_tokens - 1) // page))
-
-        # 1. prefix match: reuse already-written pool pages (refcount++).
-        #    match() caps at (S-1)//page pages <= n_need - 1, so at least
-        #    one fresh page always remains for the suffix.
         matched_ids = [] if self.prefix is None \
             else self.prefix.match(prompt)
         m = len(matched_ids)
-        matched = m * page
         if m:
             self.pool.acquire(matched_ids)
-        # 2. map the rest of the request's range onto fresh pages (evicting
-        #    LRU cached-idle pages under pressure; their tier state resets)
         if self.prefix is not None:
             fresh, evicted = self.prefix.allocate(n_need - m)
             if evicted:
                 self.tier = tkv.paged_release_pages(self.tier, evicted,
                                                     cfg.tier)
+                self._after_mapping_change()   # eviction compacts the near
+                                               # mapping: shadow is stale
         else:
             fresh = self.pool.allocate(n_need - m)
-        row = matched_ids + fresh
+        return prompt, S, n_need, matched_ids + fresh, m
+
+    def _admit(self, req: Request, slot: int, clock: float) -> float:
+        cfg = self.cfg
+        page = cfg.tier.page
+        prompt, S, n_need, row, m = self._map_request(req)
+        matched = m * page
         self.pt_host[slot] = -1
         self.pt_host[slot, :n_need] = row
         self.tier["page_table"] = self.tier["page_table"].at[slot].set(
@@ -251,7 +323,7 @@ class ServingEngine:
         if m:
             kpre, vpre = self._gather_prefix(
                 self.pool_k, self.pool_v,
-                jnp.asarray(matched_ids, jnp.int32))
+                jnp.asarray(row[:m], jnp.int32))
             positions = matched + np.arange(s_pad, dtype=np.int32)[None]
             logits, self.pool_k, self.pool_v = self._prefill_sfx(
                 self.params, {"tokens": padded, "positions": positions},
@@ -285,6 +357,105 @@ class ServingEngine:
         self.slot_history.setdefault(slot, []).append(req.rid)
         return clock
 
+    # -- chunked admission (ISSUE 8 tentpole) --------------------------------
+
+    def _admit_chunked(self, req: Request, slot: int):
+        """Reserve the slot and map the request's pages NOW (cheap,
+        host-side), but run NO prefill compute: the prompt fills in over
+        the next ticks' chunk budgets, overlapped with decode.  The device
+        page table stays unmapped until completion."""
+        prompt, S, n_need, row, m = self._map_request(req)
+        matched = m * self.cfg.tier.page
+        self.pending[slot] = _PrefillJob(req=req, prompt=prompt, S=S,
+                                         row=row, n_need=n_need,
+                                         matched=matched, cursor=matched)
+        self.report.prefill_tokens_full += S
+        self.report.prefix_hit_tokens += matched
+        self.slot_history.setdefault(slot, []).append(req.rid)
+
+    def _prefill_budget(self, n_active: int) -> int:
+        """This tick's chunk budget, shrunk by the cost-aware gate when the
+        tick is decode-heavy: serving more than half the slot pool halves
+        the prefill lane so admission work cannot crowd out in-flight
+        inter-token latency (floor: one page)."""
+        budget = self.cfg.prefill_chunk_tokens
+        if n_active > self.cfg.n_slots // 2:
+            budget = max(self.cfg.tier.page, budget // 2)
+        return budget
+
+    def _advance_prefills(self, budget: int) -> tuple[int, list]:
+        """Run at most ``budget`` prompt tokens of pending admission
+        prefills, FIFO, each job resuming from its saved cursor into its
+        already-allocated pool pages.  The boundary page of a mid-page
+        cursor is rewritten whole — an identity for rows below the cursor
+        (the chunk step's prefix rows ARE the pool bytes), so coverage
+        grows monotonically and the final rows are bit-identical to a
+        one-shot prefill.  Completed full pages are trie-inserted
+        immediately, so arrivals overlapping a still-chunking prompt can
+        already share it.  Returns (chunk_tokens, completions) with
+        completions = [(slot, job, first_token)] for jobs reaching S."""
+        cfg = self.cfg
+        page = cfg.tier.page
+        chunk_toks, done = 0, []
+        for slot, job in list(self.pending.items()):
+            take = min(budget - chunk_toks, job.S - job.cursor)
+            if take <= 0:
+                break                       # FIFO: no skipping ahead
+            c0, n = job.cursor, take
+            s_pad = -(-n // cfg.prefill_bucket) * cfg.prefill_bucket
+            padded = np.zeros((1, s_pad), np.int32)
+            padded[0, :n] = job.prompt[c0:c0 + n]
+            p_lo = c0 // page               # first page not yet complete
+            p_hi = min(-(-(c0 + n) // page), job.n_need)
+            ids = -np.ones(self.n_pages, np.int32)
+            ids[p_lo:p_hi] = job.row[p_lo:p_hi]
+            ids = jnp.asarray(ids)
+            if c0 == 0:
+                logits, self.pool_k, self.pool_v = self._prefill(
+                    self.params, {"tokens": padded}, self.pool_k,
+                    self.pool_v, ids)
+            else:
+                positions = c0 + np.arange(s_pad, dtype=np.int32)[None]
+                prefix_ids = jnp.asarray(job.row[:-(-c0 // page)], jnp.int32)
+                logits, self.pool_k, self.pool_v = self._prefill_chunk(
+                    self.params, {"tokens": padded, "positions": positions},
+                    self.pool_k, self.pool_v, prefix_ids, ids, t_pre=c0)
+            job.cursor += n
+            chunk_toks += n
+            self.report.prefill_tokens += n
+            self.report.prefill_chunks += 1
+            if self.prefix is not None:
+                n_full = job.cursor // page
+                if n_full > job.matched // page:
+                    self.prefix.insert(job.prompt[:n_full * page],
+                                       job.row[:n_full])
+            if job.cursor >= job.S:
+                done.append((slot, job, int(jnp.argmax(logits[0, n - 1]))))
+                del self.pending[slot]
+        return chunk_toks, done
+
+    def _complete_prefill(self, slot: int, job: _PrefillJob, first: int,
+                          clock: float):
+        """Install a finished prompt: the page table goes live (decode
+        appends route through it from the next tick), the slot activates,
+        and the final chunk's last-row logits seed the first token.  TTFT
+        is the clock at the completing tick minus the request's visible
+        arrival — queueing plus chunked prefill."""
+        self.pt_host[slot] = -1
+        self.pt_host[slot, :job.n_need] = job.row
+        self.tier["page_table"] = self.tier["page_table"].at[slot].set(
+            jnp.asarray(self.pt_host[slot], jnp.int32))
+        self._after_mapping_change()
+        self.pos[slot] = job.S
+        self.tok[slot] = first
+        self._static_pinned[slot] = False
+        self.slots[slot] = _Slot(req=job.req, emitted=[first],
+                                 last_emit=clock)
+        ttft = clock - self._visible_clock[job.req.rid]
+        self.report.token_latencies.append(ttft)
+        self.report.ttfts.append(ttft)
+        self.report.tokens += 1
+
     def _retire(self, slot: int):
         st = self.slots[slot]
         self.report.outputs[st.req.rid] = list(st.emitted)
@@ -315,17 +486,32 @@ class ServingEngine:
         after any event that moves the global near mapping or the page
         tables (plan / pin / release / admit / retire).  The actual re-sync
         happens once per tick (``_flush_mapping``) — N retires + M admits
-        in one tick cost one gather, not N+M."""
+        in one tick cost one gather, not N+M.  Any such event also
+        invalidates the shadow near buffer (it was derived from the
+        previous mapping)."""
         self._mapping_dirty = True
+        self._shadow_near = None
 
     def _flush_mapping(self):
         if not self._mapping_dirty:
             return
-        self.near_k, self.near_v = self._sync_near(
-            self.pool_k, self.pool_v, self.tier["page_of_slot"])
+        if self._shadow_near is not None:
+            # double-buffered near tier (ISSUE 8): the promotion copies
+            # were dispatched right after planning and drained behind the
+            # tick's host work — swap at the tick boundary instead of
+            # re-gathering on the critical path.  The shadow stayed valid
+            # because only COMPLETE pages promote: decode appends and
+            # prefill chunks never write a near-resident page.
+            self.near_k, self.near_v = self._shadow_near
+            self._shadow_near = None
+        else:
+            self.near_k, self.near_v = self._sync_near(
+                self.pool_k, self.pool_v, self.tier["page_of_slot"])
         sop = np.asarray(self.tier["slot_of_page"])
         self._promoted_host = (self.pt_host >= 0) \
             & (sop[np.maximum(self.pt_host, 0)] >= 0)
+        self._near_used = int(
+            (np.asarray(self.tier["page_of_slot"]) >= 0).sum())
         self._mapping_dirty = False
 
     def _far_rows_shadow(self) -> int:
@@ -340,18 +526,33 @@ class ServingEngine:
         return int((live * walk).sum())
 
     def _account_kv_bytes(self):
-        """Track peak LIVE KV bytes: referenced pool pages + the near-tier
-        copies, across all layers, K and V.  Trie-retained idle pages are
-        reclaimable cache, accounted separately (``kv_bytes_cached``)."""
+        """Track peak LIVE KV bytes: referenced pool pages ONLY, across all
+        layers, K and V.  The near tier holds *derived copies* of pool
+        bytes (TL-DRAM's near segment is the same mat behind the isolation
+        transistor, not extra capacity) — accounted in ``kv_bytes_near``,
+        never against the dense-equiv denominator, which never included a
+        near tier either (the kv_live_ratio 1.042 bench lie, ISSUE 8).
+        Trie-retained idle pages are reclaimable cache
+        (``kv_bytes_cached``).
+
+        ``live <= dense_equiv`` is an engine invariant asserted every
+        tick: each slot (or pending prefill job) maps at most
+        ``ceil((S + max_new - 1)/page) <= n_pages`` pages and shared pages
+        are counted once."""
         item = self.pool_k.dtype.itemsize
         row = self.arch.n_kv_heads * self.arch.resolved_head_dim * item * 2
         L = self.arch.n_layers
         page = self.cfg.tier.page
         ref_pages = int((self.pool.refcount > 0).sum())
-        near_rows = self.cfg.tier.near_pages * page
-        live = L * (ref_pages * page + near_rows) * row
+        live = L * ref_pages * page * row
+        assert live <= self.report.kv_bytes_dense_equiv, (
+            f"kv_live invariant violated: {live} referenced-pool bytes > "
+            f"dense-equiv {self.report.kv_bytes_dense_equiv} "
+            f"({ref_pages} pages referenced)")
         cached = int(((self.pool.refcount == 0) & self.pool.cached).sum())
         self.report.kv_bytes_live = max(self.report.kv_bytes_live, live)
+        self.report.kv_bytes_near = max(
+            self.report.kv_bytes_near, L * self._near_used * page * row)
         self.report.kv_bytes_cached = max(self.report.kv_bytes_cached,
                                           L * cached * page * row)
 
@@ -379,6 +580,21 @@ class ServingEngine:
 
     # -- background tier maintenance ----------------------------------------
 
+    def _bill_migration(self, clock: float, pages_moved: int) -> float:
+        """Charge migration bytes to the modeled clock.  Synchronous mode:
+        the decode clock pays immediately (the pre-ISSUE-8 stall).
+        Overlapped mode: the copies drain on a background lane — the clock
+        stalls only while the lane is still busy with the previous batch
+        (saturation), then the lane stays busy for this batch's cost."""
+        cost = self.cfg.cost.migration_cost(pages_moved, self.cfg.tier.page)
+        if not self.cfg.overlap_migration:
+            return clock + cost
+        stall = max(0.0, self._lane_free - clock)
+        self.report.migration_stall += stall
+        clock += stall
+        self._lane_free = clock + cost
+        return clock
+
     def _pin_static(self, masses: np.ndarray, need: np.ndarray,
                     clock: float) -> float:
         """STATIC: at a slot's first planning interval, place its hottest
@@ -403,7 +619,7 @@ class ServingEngine:
         if chosen:
             self.tier = tkv.paged_pin_pages(self.tier, chosen,
                                             free_slots[:len(chosen)], tier)
-            clock += cfg.cost.migration_cost(len(chosen), tier.page)
+            clock = self._bill_migration(clock, len(chosen))
             self.report.migrations += len(chosen)  # pin copies are ISTs too
         self._static_pinned |= need
         return clock
@@ -429,10 +645,16 @@ class ServingEngine:
                                    self.near_k, self.near_v, q0, pos_vec,
                                    idle, masses_dev)
             moved = int(self.tier["migrations"]) - before
-            clock += cfg.cost.migration_cost(moved, tier.page)
+            clock = self._bill_migration(clock, moved)
             self.report.migrations += moved
             if moved:     # mapping unchanged when nothing migrated
                 self._after_mapping_change()
+        if self._mapping_dirty:
+            # dispatch the near re-derivation NOW (async): the scatter runs
+            # behind this tick's emit/retire host work, and _flush_mapping
+            # swaps it in at the next tick boundary — the double buffer
+            self._shadow_near = self._sync_near(
+                self.pool_k, self.pool_v, self.tier["page_of_slot"])
         sop = np.asarray(self.tier["slot_of_page"])
         promoted = (self.pt_host >= 0) & (sop[np.maximum(self.pt_host, 0)]
                                           >= 0)              # (B, n_pages)
@@ -487,6 +709,11 @@ class ServingEngine:
         # the independent shadow accounting of far rows touched
         self._promoted_host = np.zeros((cfg.n_slots, self.n_pages), bool)
         self._mapping_dirty = False
+        self._shadow_near = None
+        self._near_used = 0
+        self.pending: dict[int, _PrefillJob] = {}
+        self._lane_free = 0.0         # background migration lane drains at
+        self._defer_count = 0         # consecutive deferred planning passes
         self.pt_host = -np.ones((cfg.n_slots, self.n_pages), np.int64)
         self.pos = np.zeros(cfg.n_slots, np.int64)
         self.tok = np.zeros(cfg.n_slots, np.int64)
@@ -501,16 +728,22 @@ class ServingEngine:
             * arch.n_kv_heads * hd * jnp.dtype(dtype).itemsize * 2)
 
         queue = deque(sorted(trace, key=lambda r: (r.arrival, r.rid)))
+        chunked = cfg.prefill_chunk_tokens is not None
         tick, clock, steps = 0, 0.0, 0
         t0 = time.perf_counter()
-        while queue or any(s is not None for s in self.slots):
+        while queue or self.pending \
+                or any(s is not None for s in self.slots):
             for req in queue:                  # sorted by arrival: stop early
                 if req.arrival > tick:
                     break
                 if req.rid not in self._visible_clock:
                     self._visible_clock[req.rid] = clock
             while queue and queue[0].arrival <= tick and self.free:
-                clock = self._admit(queue.popleft(), self.free.pop(0), clock)
+                slot = self.free.pop(0)
+                if chunked:
+                    self._admit_chunked(queue.popleft(), slot)
+                else:
+                    clock = self._admit(queue.popleft(), slot, clock)
             # a request may want exactly the prefill token (max_new_tokens=1)
             for b in range(cfg.n_slots):
                 st = self.slots[b]
@@ -518,54 +751,88 @@ class ServingEngine:
                     self._retire(b)
             self._account_kv_bytes()
             active_idx = [b for b, s in enumerate(self.slots) if s is not None]
-            if not active_idx:
+            # the chunked prefill lane: at most ``prefill_chunk_tokens`` of
+            # pending prompt work rides this tick, sharing the decode
+            # step's weight stream instead of stalling it
+            chunk_toks, completed = 0, []
+            if self.pending:
+                chunk_toks, completed = self._advance_prefills(
+                    self._prefill_budget(len(active_idx)))
+            if not active_idx and not chunk_toks and not completed:
                 if queue:
                     tick = max(tick + 1, queue[0].arrival)  # idle fast-forward
+                else:
+                    tick += 1       # unreachable guard: pending implies work
                 continue
 
-            self._flush_mapping()
-            pos_dev = jnp.asarray(self.pos, jnp.int32)
-            tokens = {"tokens": jnp.asarray(self.tok[:, None], jnp.int32)}
-            meta = self._meta(self.tier, pos_dev)
-            kv_cache = {"pool_k": self.pool_k, "pool_v": self.pool_v,
-                        "near_k": self.near_k, "near_v": self.near_v,
-                        "pos": pos_dev}
-            logits, new_cache, aux = self._decode(self.params, kv_cache,
-                                                  tokens, meta)
-            self.pool_k = new_cache["pool_k"]
-            self.pool_v = new_cache["pool_v"]
-            if self.fused:
-                # the walk's accounting (device) + an independent host
-                # shadow: both must equal the live non-promoted page rows
-                self.report.far_rows_touched += int(meta["walk_live"].sum())
-                self.report.far_rows_host += self._far_rows_shadow()
-            else:
-                # the materializing path gathers the full far view
-                self.report.far_rows_touched += \
+            ran_decode = False
+            if active_idx:
+                self._flush_mapping()
+                pos_dev = jnp.asarray(self.pos, jnp.int32)
+                tokens = {"tokens": jnp.asarray(self.tok[:, None], jnp.int32)}
+                meta = self._meta(self.tier, pos_dev)
+                kv_cache = {"pool_k": self.pool_k, "pool_v": self.pool_v,
+                            "near_k": self.near_k, "near_v": self.near_v,
+                            "pos": pos_dev}
+                logits, new_cache, aux = self._decode(self.params, kv_cache,
+                                                      tokens, meta)
+                self.pool_k = new_cache["pool_k"]
+                self.pool_v = new_cache["pool_v"]
+                if self.fused:
+                    # the walk's accounting (device) + an independent host
+                    # shadow: both must equal the live non-promoted page rows
+                    self.report.far_rows_touched += int(meta["walk_live"].sum())
+                    self.report.far_rows_host += self._far_rows_shadow()
+                else:
+                    # the materializing path gathers the full far view
+                    self.report.far_rows_touched += \
+                        self.n_pages * cfg.tier.page * cfg.n_slots
+                self.report.far_rows_dense += \
                     self.n_pages * cfg.tier.page * cfg.n_slots
-            self.report.far_rows_dense += \
-                self.n_pages * cfg.tier.page * cfg.n_slots
-            toks = np.asarray(jnp.argmax(logits, axis=-1))[:, 0]
+                toks = np.asarray(jnp.argmax(logits, axis=-1))[:, 0]
 
-            live = self.pos[active_idx] + 1
-            clock += cfg.cost.decode_step_cost(
-                self._near_tokens[active_idx], live)
-            steps += 1
-            for b in active_idx:
-                st = self.slots[b]
-                st.emitted.append(int(toks[b]))
-                self.report.token_latencies.append(clock - st.last_emit)
-                st.last_emit = clock
-                self.report.tokens += 1
-                self.pos[b] += 1
-                self.tok[b] = int(toks[b])
-                if len(st.emitted) >= st.req.max_new_tokens:
-                    self._retire(b)
-            if steps % cfg.tier.interval == 0:
-                idle = not (queue and queue[0].arrival <= tick)
-                clock = self._maintain(aux["q0"], clock, idle)
+                live = self.pos[active_idx] + 1
+                # one fused iteration: decode KV sweep + piggybacked chunk
+                # tokens share the tick's weight stream
+                clock += cfg.cost.decode_step_cost(
+                    self._near_tokens[active_idx], live) \
+                    + cfg.cost.chunk_prefill_cost(chunk_toks)
+                steps += 1
+                ran_decode = True
+                for b in active_idx:
+                    st = self.slots[b]
+                    st.emitted.append(int(toks[b]))
+                    self.report.token_latencies.append(clock - st.last_emit)
+                    st.last_emit = clock
+                    self.report.tokens += 1
+                    self.pos[b] += 1
+                    self.tok[b] = int(toks[b])
+                    if len(st.emitted) >= st.req.max_new_tokens:
+                        self._retire(b)
+            else:
+                # prefill-only tick: the chunks stream the weights alone
+                clock += cfg.cost.prefill_cost(chunk_toks)
+            for slot, job, first in completed:
+                self._complete_prefill(slot, job, first, clock)
+            if ran_decode and steps % cfg.tier.interval == 0:
+                # cost-aware deferral gate (the WMC queue-idle gate
+                # generalized to all four policies): while the run queue is
+                # hot — arrivals waiting or prompts still chunking — keep
+                # migration bandwidth off the critical path, bounded by
+                # ``defer_limit`` so sustained load still gets maintenance
+                hot = bool(self.pending) \
+                    or bool(queue and queue[0].arrival <= tick)
+                if hot and self._defer_count < cfg.defer_limit:
+                    self._defer_count += 1
+                    self.report.migration_deferrals += 1
+                else:
+                    self._defer_count = 0
+                    clock = self._maintain(aux["q0"], clock, not hot)
             tick += 1
 
+        if cfg.overlap_migration:
+            # the background lane finishes draining after the last token
+            clock = max(clock, self._lane_free)
         self._assert_zero_orphans()
         self.report.steps = steps
         self.report.wall_s = time.perf_counter() - t0

@@ -67,16 +67,18 @@ def bursty(vocab: int, n_requests: int = 12, prompt_len: int = 24,
 def long_context_stragglers(vocab: int, n_requests: int = 10,
                             prompt_len: int = 16, max_new_tokens: int = 12,
                             straggler_every: int = 4, long_factor: int = 4,
-                            seed: int = 2) -> list[Request]:
+                            gap: int = 2, seed: int = 2) -> list[Request]:
     """Mostly short requests plus periodic long-prompt, long-generation
-    stragglers that pin a slot for many ticks."""
+    stragglers that pin a slot for many ticks.  ``gap=1`` oversubscribes
+    the slot pool so the median request queues behind the stragglers — the
+    regime where synchronous admission prefill inflates everyone's TTFT."""
     rng = np.random.default_rng(seed)
     reqs = []
     for i in range(n_requests):
         straggler = (i % straggler_every) == (straggler_every - 1)
         plen = prompt_len * (long_factor if straggler else 1)
         gen = max_new_tokens * (2 if straggler else 1)
-        reqs.append(Request(rid=i, arrival=i * 2,
+        reqs.append(Request(rid=i, arrival=i * gap,
                             prompt=_zipf_tokens(rng, vocab, plen),
                             max_new_tokens=gen))
     return reqs
@@ -84,17 +86,38 @@ def long_context_stragglers(vocab: int, n_requests: int = 10,
 
 def shifting_hotspot(vocab: int, n_requests: int = 12, prompt_len: int = 24,
                      max_new_tokens: int = 16, gap: int = 2,
-                     seed: int = 3) -> list[Request]:
-    """The Zipf head rotates halfway through the stream: policies that
-    never evict (STATIC) or evict eagerly (SC) separate from BBC here,
-    exactly as on the paper's policy comparison."""
+                     seed: int = 3, hot_len: int = 16,
+                     drift_at: float = 0.5) -> list[Request]:
+    """Every prompt starts with a shared hot head (the serving analogue of
+    the paper's hottest-row concentration) whose identity ROTATES at
+    ``drift_at`` of the stream: phase-2 requests share a *different* head
+    drawn from the rotated Zipf head.  Policies that never evict (STATIC)
+    keep serving the stale hot set while eviction-capable policies
+    re-promote, and the prefix cache sees a hit-rate cliff at the drift —
+    so the drift is observable in engine metrics, not just token content.
+
+    (The pre-ISSUE-8 generator rotated only the token *identities* inside
+    otherwise-private prompts; with identical arrival/length schedules no
+    modeled metric could distinguish it from ``steady_zipfian``, which is
+    exactly the identical-rows bug BENCH_serving.json exposed.)
+
+    ``hot_len`` should be a page multiple so the hot head is shareable at
+    page granularity; the arrival/length schedule intentionally matches
+    ``steady_zipfian`` so any metric difference is attributable to the key
+    distribution alone."""
+    assert 0 < hot_len < prompt_len
     rng = np.random.default_rng(seed)
+    split = int(n_requests * drift_at)
+    head_a = _zipf_tokens(rng, vocab, hot_len)
+    head_b = _zipf_tokens(rng, vocab, hot_len, head_offset=vocab // 2)
     reqs = []
     for i in range(n_requests):
-        offset = 0 if i < n_requests // 2 else vocab // 2
+        head = head_a if i < split else head_b
+        offset = 0 if i < split else vocab // 2
+        tail = _zipf_tokens(rng, vocab, prompt_len - hot_len,
+                            head_offset=offset)
         reqs.append(Request(rid=i, arrival=i * gap,
-                            prompt=_zipf_tokens(rng, vocab, prompt_len,
-                                                head_offset=offset),
+                            prompt=np.concatenate([head, tail]),
                             max_new_tokens=max_new_tokens))
     return reqs
 

@@ -310,7 +310,9 @@ class TestRealStackIsClean:
         assert set(rep["passes_run"]) == {
             "no-dense-far-view", "f32-accumulation", "no-host-sync",
             "vmem-budget", "no-collectives", "pool-ownership"}
-        assert len(rep["targets_run"]) == 7
+        assert len(rep["targets_run"]) == 8
+        assert "chunk_prefill" in rep["targets_run"], \
+            "the chunked admission-prefill step must be under analysis"
 
     def test_planted_target_fails_through_runner(self):
         """End to end: a broken target injected into the runner flips the

@@ -135,6 +135,11 @@ class PagedWorld:
         self.q = jnp.asarray(self.rng.normal(size=(B, HKV * 2, HD)),
                              jnp.float32)
         self.total_hit_pages = 0
+        # chunked admissions in flight (ISSUE 8): slot -> job.  A pending
+        # slot holds refcounted pool pages and a resume cursor but NO page
+        # table row — the read/append path must treat it exactly like a
+        # free slot until the job completes.
+        self.pending = {}
 
     # -- content plumbing ----------------------------------------------------
 
@@ -235,6 +240,70 @@ class PagedWorld:
             self.cache, self.q, jnp.asarray(self.pos, jnp.int32),
             self.cfg, idle=idle)
 
+    def admit_partial(self):
+        """Engine `_admit_chunked`: map the pages (trie match + acquire +
+        allocate) but write nothing past the matched prefix — the prompt
+        fills in over later ``advance_prefill`` chunks, interleaved with
+        decode ticks on OTHER slots."""
+        free = [b for b in np.flatnonzero(~self.active)
+                if b not in self.pending]
+        if not free:
+            return
+        b = int(free[0])
+        fam = self.families[self.rng.integers(len(self.families))]
+        S = int(self.rng.integers(PAGE + 1, MAX_LEN - PAGE))
+        tail = int(self.rng.integers(1, PAGE))
+        toks = fam[:S].copy()
+        toks[S - tail:] = self.rng.integers(0, VOCAB, tail)
+        matched = []
+        if self.prefix is not None:
+            matched = self.prefix.match(toks)
+            self.pool.acquire(matched)
+            fresh, evicted = self.prefix.allocate(N_PAGES - len(matched))
+            if evicted:
+                self.cache = tkv.paged_release_pages(self.cache, evicted,
+                                                     self.cfg)
+        else:
+            fresh = self.pool.allocate(N_PAGES)
+        self.total_hit_pages += len(matched)
+        self.pending[b] = {"toks": toks, "S": S, "row": matched + fresh,
+                           "cursor": len(matched) * PAGE}
+
+    def advance_prefill(self):
+        """One chunk of the FIFO-first pending job: write a random number
+        of rows from the cursor (mid-page cursors rewrite the boundary
+        page whole — an identity below the cursor), trie-insert completed
+        pages, and on reaching S install the page table + activate —
+        the engine's `_advance_prefills` + `_complete_prefill`."""
+        if not self.pending:
+            return
+        b = next(iter(self.pending))
+        job = self.pending[b]
+        toks, S, row = job["toks"], job["S"], job["row"]
+        c0 = job["cursor"]
+        take = min(S - c0, int(self.rng.integers(1, 2 * PAGE + 1)))
+        cur = c0 + take
+        for j in range(c0 // PAGE, min(-(-cur // PAGE), N_PAGES)):
+            upto = min(cur, (j + 1) * PAGE)
+            if upto > j * PAGE:
+                self._write_page_from_tokens(row[j], j, toks, upto)
+        job["cursor"] = cur
+        if self.prefix is not None and cur // PAGE > c0 // PAGE:
+            self.prefix.insert(toks[:(cur // PAGE) * PAGE],
+                               row[:cur // PAGE])
+        if cur >= S:
+            del self.pending[b]
+            self.pt[b] = row
+            self.cache["page_table"] = self.cache["page_table"].at[b].set(
+                jnp.asarray(row, jnp.int32))
+            self.tokens[b, :S] = toks
+            for p in range(S):
+                kv = _kv(p, int(toks[p]))
+                self.oracle_k[b, p] = kv[0]
+                self.oracle_v[b, p] = kv[1]
+            self.pos[b] = S
+            self.active[b] = True
+
     def retire(self):
         act = np.flatnonzero(self.active)
         if not act.size:
@@ -257,6 +326,9 @@ class PagedWorld:
             for p in self.pt[b]:
                 if p >= 0:
                     want[p] += 1
+        for job in self.pending.values():       # chunked admissions hold
+            for p in job["row"]:                # their pages from mapping
+                want[p] += 1                    # time, page table or not
         np.testing.assert_array_equal(self.pool.refcount, want)
         # pages on the free list are unreferenced and uncached
         for p in self.pool._free:
@@ -305,6 +377,9 @@ class PagedWorld:
                     np.asarray(dense)[self.active], rtol=1e-5, atol=1e-5)
 
     def drain(self):
+        while self.pending:                 # finish in-flight chunked
+            self.advance_prefill()          # admissions first: their pages
+            self.check()                    # are live refcounts too
         while self.active.any():
             self.retire()
             self.check()
@@ -346,6 +421,55 @@ class TestPagedInterleavings:
         assert world.total_hit_pages > 0, "trie never matched"
         assert saw_shared, "no page was ever shared by two slots"
         assert world.pool.cached.any(), "prefix cache retained nothing"
+
+
+CHUNK_OPS = ("admit_partial", "advance_prefill", "advance_prefill",
+             "decode", "migrate", "retire")
+
+
+class TestChunkedPrefillInterleavings:
+    """ISSUE 8 satellite: 'partial prefill then decode tick' op mix.
+
+    A pending chunked admission owns refcounted pool pages with NO page
+    table row; every check() proves decode appends, migrations, reads,
+    sharing and retires stay correct while jobs are mid-chunk — including
+    other slots trie-matching a still-chunking prompt's completed pages."""
+
+    @given(seed=st.integers(0, 999),
+           policy=st.sampled_from(["SC", "WMC", "BBC"]),
+           share=st.booleans())
+    @settings(max_examples=6, deadline=None)
+    def test_partial_prefill_interleaved_with_decode(self, seed, policy,
+                                                     share):
+        world = PagedWorld(seed, policy, share)
+        for _ in range(28):
+            op = world.rng.choice(CHUNK_OPS,
+                                  p=[0.25, 0.2, 0.2, 0.15, 0.1, 0.1])
+            getattr(world, op)()
+            world.check()
+        world.drain()
+
+    def test_pending_slot_is_invisible_until_completion(self):
+        """The deterministic core of the overlap: admit slot 0 fully,
+        admit slot 1 partially, then decode — slot 0 advances, slot 1's
+        pages stay out of the read path and its refcounts stay pinned;
+        completion flips it live with bit-exact rows."""
+        world = PagedWorld(11, "BBC", share=True)
+        world.families = world.families[:1]
+        world.admit()
+        world.admit_partial()
+        assert world.pending and not world.active[1]
+        held = list(world.pending[1]["row"])
+        for _ in range(3):
+            world.decode()
+            world.check()
+            assert not world.active[1]
+            assert all(world.pool.refcount[p] >= 1 for p in held)
+        while world.pending:
+            world.advance_prefill()
+            world.check()
+        assert world.active[1]
+        world.drain()
 
 
 class TestFusedKernelInterleavings:

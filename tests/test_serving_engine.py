@@ -213,11 +213,29 @@ class TestServingBenchFull:
         from benchmarks import serving_bench
         rows = serving_bench.run_all()
         scenario_rows = [r for r in rows if r[0] in SCENARIOS]
-        assert len(scenario_rows) == 20   # 5 scenarios x 4 policies
+        assert len(scenario_rows) == 24   # 6 scenarios x 4 policies
         prefix_rows = {r[1]: r[2] for r in rows if r[0] == "prefix_sharing"}
         assert prefix_rows["prefill_tokens_saved_frac"] >= 0.4
         assert prefix_rows["outputs_identical"] is True
         assert prefix_rows["chat_prefix_hit_rate"] > 0
+        # ISSUE 8 bench-lie re-pins, on the committed matrix itself: the
+        # shifting_hotspot rows must not duplicate steady_zipfian's, the
+        # shared-prefix scenarios must show non-zero prefix hits, and no
+        # cell may report live KV above its dense equivalent.
+        header = list(rows[0])
+        by_scenario = {}
+        for r in scenario_rows:
+            by_scenario.setdefault(r[0], []).append(r)
+        assert by_scenario["shifting_hotspot"] != \
+            [("shifting_hotspot",) + tuple(r[1:])
+             for r in by_scenario["steady_zipfian"]]
+        hit_col = header.index("prefix_hit_rate")
+        ratio_col = header.index("kv_live_ratio")
+        for name in ("shared_system_prompt", "shifting_hotspot",
+                     "long_context_summarize"):
+            assert all(r[hit_col] > 0 for r in by_scenario[name]), \
+                f"{name}: prefix_hit_rate must be > 0 with sharing on"
+        assert all(r[ratio_col] <= 1.0 for r in scenario_rows)
 
 
 def test_serving_bench_smoke():
