@@ -12,6 +12,10 @@ Fails when, for any (scenario, policy) cell present in both files:
   * ``kv_bytes_live`` grows AT ALL (any memory growth is a regression:
     the pool-native engine's whole point is that live KV tracks demand).
 
+Additionally the ``mesh_scaling`` acceptance cell's ``tok_per_kcost*``
+keys (single-lane, fleet, per-device — ISSUE 10) regress like matrix
+throughput: a > ``--tol`` drop in modeled tokens/cost-per-device fails.
+
 Wall-clock tokens/s is also diffed but only *warns* by default — CI
 runners and dev machines differ by integer factors, so a wall gate would
 flap; pass ``--strict-wall`` to enforce it on a pinned machine.  The
@@ -72,6 +76,19 @@ def compare(old: dict, new: dict, tol: float = 0.10,
             msg = (f"{key}: wall tokens/s {n_wall:.1f} < "
                    f"{(1 - tol):.0%} of committed {o_wall:.1f}")
             (failures if strict_wall else warnings).append(msg)
+    # ISSUE 10: the mesh-scaling acceptance cell's modeled-throughput
+    # keys (single-lane, fleet, AND per-device — the column that catches
+    # "more lanes hiding a slower engine") gate exactly like matrix cells.
+    o_mesh = old.get("cells", {}).get("mesh_scaling", {})
+    n_mesh = new.get("cells", {}).get("mesh_scaling", {})
+    for key in sorted(set(o_mesh) & set(n_mesh)):
+        if not key.startswith("tok_per_kcost"):
+            continue
+        o_thr, n_thr = float(o_mesh[key]), float(n_mesh[key])
+        if o_thr > 0 and n_thr < o_thr * (1.0 - tol):
+            failures.append(
+                f"mesh_scaling/{key}: modeled throughput {n_thr:.3f} < "
+                f"{(1 - tol):.0%} of committed {o_thr:.3f}")
     for w in warnings:
         print(f"WARN (wall clock, not gated): {w}")
     return failures

@@ -34,6 +34,11 @@ Plus two acceptance cells:
       dense-equivalent per-slot master on the shared_system_prompt and
       long_context_summarize traces, with zero orphaned pages (the
       engine's shutdown refcount sweep runs inside every cell).
+  mesh_scaling : ISSUE 10 acceptance — 4 data-parallel engine lanes
+      (round-robin admissions, per-lane byte-cost clocks, fleet clock =
+      slowest lane) must deliver >= 3x the single-lane modeled tokens/cost
+      on the slot-bound steady Zipfian, tokens bit-identical; the
+      per-device throughput column is regression-gated.
   chunked_prefill : ISSUE 8 acceptance — budgeted chunked admission
       prefill + overlapped migration vs the synchronous engine on the
       two stall-dominated traces (bursty, long_context_stragglers):
@@ -58,8 +63,8 @@ import jax
 from repro.configs.registry import ARCHS
 from repro.core.tiered_kv import TieredKVConfig
 from repro.models import transformer
-from repro.serve import (ServingConfig, ServingEngine, ServingReport,
-                         sequential_baseline)
+from repro.serve import (DataParallelEngine, ServingConfig, ServingEngine,
+                         ServingReport, sequential_baseline)
 from repro.serve.trace import SCENARIOS
 
 POLICIES = ("SC", "WMC", "BBC", "STATIC")
@@ -342,6 +347,49 @@ def bench_chunked_prefill(arch_name="qwen3-1.7b", policy="BBC",
     return out
 
 
+def bench_mesh_scaling(arch_name="qwen3-1.7b", policy="BBC", lanes=4):
+    """ISSUE 10 acceptance cell: data-parallel serving over the mesh's
+    'data' axis — R engine replicas, round-robin admissions by arrival,
+    per-lane byte-cost clocks, fleet clock = slowest lane.  On the
+    slot-bound steady Zipfian (4 slots, 48 uniform requests: each lane
+    keeps its slots saturated long enough to amortize its admission
+    ramp, and prefills stop serializing on a single clock) the modeled
+    fleet throughput at 4 lanes must be >= 3x the single-lane engine, with emitted tokens
+    bit-identical — decode tokens are batching-invariant, so
+    partitioning the trace changes no token.  Lanes are host-modeled
+    (every replica is the same jitted program with its own clock), so
+    this cell runs on any device count; the kernel-level KV-head
+    sharding is pinned by tests/test_mesh_serving.py on the mesh-4dev
+    CI leg.  ``check_bench_regression`` gates every ``tok_per_kcost*``
+    key in this cell, including the per-device column."""
+    arch, params = _setup(arch_name)
+    trace = SCENARIOS["steady_zipfian"](
+        arch.vocab, n_requests=48, prompt_len=24, max_new_tokens=16, gap=1)
+    cfg = _config(policy, n_slots=4)
+    dp = DataParallelEngine(params, arch, cfg, n_replicas=lanes)
+    dp.engine.run(trace, "warmup")          # one engine serves every lane:
+                                            # compile once, reuse R+1 times
+    single = dp.engine.run(trace, "steady_zipfian")
+    fleet = dp.run(trace, "steady_zipfian")
+    assert fleet.outputs == single.outputs, \
+        "data-parallel lanes changed emitted tokens"
+    assert fleet.tokens == single.tokens
+    speedup = fleet.tokens_per_cost / single.tokens_per_cost
+    assert speedup >= 3.0, \
+        f"{lanes}-lane modeled throughput only {speedup:.2f}x single-lane"
+    return [
+        ("mesh_scaling", "lanes", lanes),
+        ("mesh_scaling", "outputs_identical", True),
+        ("mesh_scaling", "tok_per_kcost_1lane",
+         round(single.tokens_per_cost * 1e3, 3)),
+        ("mesh_scaling", "tok_per_kcost_fleet",
+         round(fleet.tokens_per_cost * 1e3, 3)),
+        ("mesh_scaling", "tok_per_kcost_per_device",
+         round(fleet.tokens_per_cost / lanes * 1e3, 3)),
+        ("mesh_scaling", "speedup_modeled", round(speedup, 2)),
+    ]
+
+
 def run_all(out_path: str | None = "BENCH_serving.json"):
     rows = [ServingReport.HEADER] + bench_scenarios()
     rows += bench_continuous_vs_sequential()
@@ -349,6 +397,7 @@ def run_all(out_path: str | None = "BENCH_serving.json"):
     rows += bench_fused_kernel()
     rows += bench_pool_native()
     rows += bench_chunked_prefill()
+    rows += bench_mesh_scaling()
     for r in rows:
         print(",".join(str(x) for x in r))
     if out_path:

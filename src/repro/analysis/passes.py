@@ -173,14 +173,52 @@ def vmem_budget(target: AnalysisTarget) -> list[Violation]:
 
 
 @register("no-collectives",
-          "migration planning lowers to pure on-device copies: optimized "
-          "HLO contains no collective ops",
+          "collective-free unless declared: jaxpr collectives may only run "
+          "over the target's allowed mesh axes, and optimized HLO may only "
+          "contain collective kinds those declared collectives account for",
           applies=lambda t: t.check_collectives)
 def no_collectives(target: AnalysisTarget) -> list[Violation]:
+    """Axis-aware no-collectives (docs/design.md §3).
+
+    Two layers, because they see different things:
+
+      * jaxpr: collectives still carry mesh AXIS NAMES (``psum`` over
+        ``('model',)``), so a target may declare ``allowed_axes`` — the
+        mesh-sharded read path's `shard_map` stats gathers over 'model'
+        are by-design — and anything over an undeclared axis is flagged
+        (``collective-axis``).
+      * optimized HLO: axis names are erased into replica groups, but
+        GSPMD may also have INSERTED collectives the jaxpr never wrote
+        (the involuntary-resharding bug class this pass exists to catch).
+        A collective KIND in HLO is excused only when an allowed jaxpr
+        collective lowers to that kind; unexpected kinds still fail
+        (``collective-op``) — so declaring 'model' for an all-gather does
+        not quietly bless a GSPMD-introduced all-reduce.
+
+    A target with no ``allowed_axes`` (migration planning — the IST
+    analogue must be pure on-device copies) keeps the original contract:
+    ANY collective, at either layer, fails."""
+    viols = []
+    allowed = set(target.allowed_axes)
+    excused_kinds = set()
+    for we, axes in walker.jaxpr_collectives(target.walk()):
+        bad = sorted(a for a in axes if a not in allowed)
+        if bad:
+            viols.append(Violation(
+                pass_name="no-collectives", rule="collective-axis",
+                where=target.name,
+                detail=f"jaxpr collective `{we.prim}` over undeclared mesh "
+                       f"axes {bad} (declared: "
+                       f"{sorted(allowed) if allowed else 'none'})",
+                source=we.source))
+        else:
+            excused_kinds.add(walker.COLLECTIVE_PRIMS[we.prim])
     present = walker.hlo_ops_present(target.hlo_text(), walker.COLLECTIVE_OPS)
-    return [Violation(
+    viols.extend(Violation(
         pass_name="no-collectives", rule="collective-op",
         where=target.name,
-        detail=f"collective `{op}` in optimized HLO — migration must be "
-               f"channel-free on-device page copies")
-        for op in present]
+        detail=f"collective `{op}` in optimized HLO not accounted for by "
+               f"a declared jaxpr collective — either an undeclared "
+               f"explicit collective or a GSPMD-inserted reshard")
+        for op in present if op not in excused_kinds)
+    return viols

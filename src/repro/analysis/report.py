@@ -44,6 +44,20 @@ def load_baseline(path: str | Path) -> dict[str, str]:
     return {str(k): str(v) for k, v in waivers.items()}
 
 
+def load_allowed_axes(path: str | Path) -> dict[str, tuple[str, ...]]:
+    """The baseline's declared mesh axes per target: ``allowed_axes`` maps
+    target name -> list of axis names whose jaxpr collectives the
+    no-collectives pass accepts (the mesh-sharded read path's by-design
+    'model'-axis gathers).  Committed next to the waivers so declaring an
+    axis is a reviewable act, not a code default."""
+    p = Path(path)
+    if not p.exists():
+        return {}
+    data = json.loads(p.read_text())
+    axes = data.get("allowed_axes", {}) if isinstance(data, dict) else {}
+    return {str(k): tuple(str(a) for a in v) for k, v in axes.items()}
+
+
 @dataclass
 class AnalysisReport:
     """The full result of one analysis run."""

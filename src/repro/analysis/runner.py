@@ -5,7 +5,8 @@ from __future__ import annotations
 
 from pathlib import Path
 
-from repro.analysis.report import AnalysisReport, load_baseline
+from repro.analysis.report import (AnalysisReport, load_allowed_axes,
+                                   load_baseline)
 
 # src/repro — the tree the ownership linter audits.
 DEFAULT_SRC_ROOT = Path(__file__).resolve().parents[1]
@@ -18,13 +19,18 @@ def run_analysis(mode: str | None = None,
                  src_root: str | Path | None = None,
                  baseline: str | Path | dict | None = None,
                  targets=None,
-                 with_ownership: bool = True) -> AnalysisReport:
+                 with_ownership: bool = True,
+                 allowed_axes: dict | None = None) -> AnalysisReport:
     """One full analysis run under one kernel mode.
 
     mode: dense | gather | fused (default: $REPRO_KERNEL_MODE).
     baseline: a waiver dict, a path to the baseline JSON, or None for the
     committed ``analysis_baseline.json`` at the repo root.
     targets: override the registry (tests plant broken mini-steps here).
+    allowed_axes: per-target declared mesh axes for the no-collectives
+    pass ({target name: [axis, ...]}); None reads the baseline file's
+    ``allowed_axes`` section (or {} when the baseline is an in-memory
+    waiver dict).  Merged into each target by name.
     """
     from repro.analysis import passes as passes_mod
     from repro.analysis import targets as targets_mod
@@ -33,6 +39,14 @@ def run_analysis(mode: str | None = None,
     mode = mode or targets_mod.kernel_mode()
     if targets is None:
         targets = targets_mod.build_targets(mode)
+    if allowed_axes is None:
+        src = DEFAULT_BASELINE if baseline is None else baseline
+        allowed_axes = {} if isinstance(src, dict) else load_allowed_axes(src)
+    for t in targets:
+        extra = allowed_axes.get(t.name, ())
+        if extra:
+            t.allowed_axes = tuple(dict.fromkeys(
+                (*t.allowed_axes, *extra)))
 
     report = AnalysisReport(kernel_mode=mode)
     for p in passes_mod.PASSES:

@@ -75,6 +75,10 @@ class AnalysisTarget:
     forbidden_shapes: tuple = ()
     per_tick: bool = True        # no-host-sync applies
     check_collectives: bool = False
+    allowed_axes: tuple = ()     # mesh axes the no-collectives pass accepts
+                                 # jaxpr collectives over (declared in
+                                 # analysis_baseline.json "allowed_axes" —
+                                 # the runner merges them by target name)
     _jaxpr: object = field(default=None, repr=False)
 
     def jaxpr(self):
@@ -164,6 +168,26 @@ def build_targets(mode: str | None = None) -> list[AnalysisTarget]:
         fn=lambda c, b, m: decode(params, c, b, m),
         args=(pools, batch, meta),
         forbidden_shapes=_forbidden(arch, mode, read_path=True)))
+
+    # 2b. mesh-sharded decode step (docs/design.md §2h), registered only
+    # where a multi-device mesh exists (the mesh-4dev CI leg forces one
+    # with XLA_FLAGS) and in fused mode (the production-shaped read path).
+    # check_collectives=True with the baseline-declared allowed_axes: the
+    # shard_map stats gathers over 'model' are by-design; anything else —
+    # an undeclared axis, or a GSPMD-inserted reshard of a kind the
+    # declared collectives don't account for — fails the pass.
+    if mode == "fused" and jax.device_count() > 1 \
+            and arch.n_kv_heads % 2 == 0:
+        import dataclasses as _dc
+        from repro.launch.mesh import make_test_mesh
+        scfg = _dc.replace(cfg, mesh=make_test_mesh(2))
+        sdecode = make_paged_tiered_decode_step(arch, scfg)
+        targets.append(AnalysisTarget(
+            name="paged_decode_step_sharded",
+            fn=lambda c, b, m: sdecode(params, c, b, m),
+            args=(pools, batch, meta),
+            forbidden_shapes=_forbidden(arch, mode, read_path=True),
+            check_collectives=True))
 
     # 3./4. pool prefill + shared-prefix suffix prefill (dense rows are a
     # transient inside the step; only the pool survives)

@@ -281,3 +281,38 @@ def hlo_ops_present(hlo_text: str, ops: Iterable[str]) -> list[str]:
 
 COLLECTIVE_OPS = ("all-reduce", "all-gather", "all-to-all",
                   "collective-permute", "reduce-scatter")
+
+# jaxpr-level collective primitives -> the HLO op kind each lowers to.
+# Unlike optimized HLO (where axis names are erased into replica groups),
+# jaxpr collectives still carry their mesh axis names in eqn params — the
+# layer where "a psum over the declared 'model' axis" is checkable at all.
+COLLECTIVE_PRIMS = {
+    "psum": "all-reduce",
+    "pmax": "all-reduce",
+    "pmin": "all-reduce",
+    "all_gather": "all-gather",
+    "all_to_all": "all-to-all",
+    "ppermute": "collective-permute",
+    "pshuffle": "collective-permute",
+    "psum_scatter": "reduce-scatter",
+}
+
+
+def collective_axes(we: WalkedEqn) -> tuple[str, ...]:
+    """The mesh axis names a jaxpr collective equation reduces/gathers
+    over.  psum-family primitives store them under ``axes``; the
+    gather/permute family under ``axis_name``; either may be a single name
+    or a tuple."""
+    axes = we.params.get("axes", we.params.get("axis_name", ()))
+    if not isinstance(axes, (tuple, list)):
+        axes = (axes,)
+    return tuple(str(a) for a in axes)
+
+
+def jaxpr_collectives(walked: list[WalkedEqn]) \
+        -> list[tuple[WalkedEqn, tuple[str, ...]]]:
+    """Every collective equation of a walked program (at any nesting depth
+    — ``collect_eqns`` recurses through ``shard_map`` like any other
+    call-like primitive) with its axis names."""
+    return [(we, collective_axes(we)) for we in walked
+            if we.prim in COLLECTIVE_PRIMS]

@@ -80,6 +80,14 @@ class TieredKVConfig:
                                   # materialization; far bytes touched per
                                   # step = live non-promoted page rows only.
                                   # The dense path stays the oracle.
+    mesh: object = None           # jax.sharding.Mesh: shard the pool/near
+                                  # buffers by KV head over the 'model' axis
+                                  # (shard_map around every Pallas read;
+                                  # scatter/slice paths partition under
+                                  # GSPMD).  Falls back to replication when
+                                  # Hkv does not divide the axis
+                                  # (sharding.specs.kv_shard_count).  None:
+                                  # single-device (the default everywhere).
 
 
 def init_tiered_cache(k_cache: jax.Array, v_cache: jax.Array,
@@ -559,8 +567,10 @@ def paged_far_view(cache: dict, cfg: TieredKVConfig):
         # is arbitrary and masked)
         from repro.kernels.paged_gather import paged_gather
         interpret = jax.default_backend() == "cpu"
-        far_k = paged_gather(cache["pool_k"], pt, interpret=interpret)
-        far_v = paged_gather(cache["pool_v"], pt, interpret=interpret)
+        far_k = paged_gather(cache["pool_k"], pt, interpret=interpret,
+                             mesh=cfg.mesh)
+        far_v = paged_gather(cache["pool_v"], pt, interpret=interpret,
+                             mesh=cfg.mesh)
         return far_k, far_v
     safe = jnp.maximum(pt, 0)
     _, page, Hkv, hd = cache["pool_k"].shape
@@ -714,7 +724,7 @@ def paged_tiered_attention(cache: dict, q: jax.Array, pos: jax.Array,
         from repro.kernels.paged_attention import paged_attention_stats
         stats = paged_attention_stats(
             q, cache["pool_k"], cache["pool_v"],
-            cache["near_k"], cache["near_v"], meta)
+            cache["near_k"], cache["near_v"], meta, mesh=cfg.mesh)
         return ref.merge_attention_stats([stats])
     far_k, far_v = paged_far_view(cache, cfg)
     far_live, near_live = _paged_masks(cache, pos, cfg, meta=meta)
@@ -777,7 +787,7 @@ def paged_page_masses(q: jax.Array, cache: dict, pos: jax.Array,
         interpret = jax.default_backend() == "cpu"
         mass = paged_masses(q, cache["pool_k"], walk["score_pid"],
                             walk["score_live"], walk["score_len"],
-                            interpret=interpret)                  # (B, W)
+                            interpret=interpret, mesh=cfg.mesh)   # (B, W)
         out = jnp.zeros((B, n_pages), jnp.float32).at[
             jnp.arange(B)[:, None], walk["score_j"]].add(mass, mode="drop")
         return out / max(H, 1)

@@ -52,15 +52,58 @@ NEG_INF = -1e30
 
 def paged_attention_stats(q: jax.Array, pool_k: jax.Array,
                           pool_v: jax.Array, near_k: jax.Array,
-                          near_v: jax.Array, meta: dict):
+                          near_v: jax.Array, meta: dict, mesh=None):
     """Run the fused kernel from a ``paged_step_metadata`` dict — the one
     entry point both the serving decode step and the core read path /
-    verification probe share (interpret mode on CPU backends)."""
+    verification probe share (interpret mode on CPU backends).
+
+    With a ``mesh`` whose 'model' axis divides Hkv, the pool and near
+    buffers are KV-HEAD-SHARDED and the kernel runs under ``shard_map``:
+    each device walks only its head slice of every mapped page (GSPMD
+    cannot partition a ``pallas_call``, so the shard boundary is explicit).
+    The per-head math is untouched — the kernel's grid is ``(B, Hkv)`` and
+    no arithmetic crosses heads — so a tiled ``all_gather`` of the per-head
+    stats over 'model' returns REPLICATED (out, m, l) bit-identical to the
+    single-device call, and every cross-head reduction downstream (the wo
+    projection, the LSE merge) sees the full head dim in single-device
+    order.  Head counts that do not divide the axis fall back to the
+    replicated single-device call (``kv_shard_count``)."""
+    from repro.sharding.specs import kv_shard_count
     interpret = jax.default_backend() == "cpu"
-    return paged_attention(q, pool_k, pool_v, near_k, near_v,
-                           meta["walk_pid"], meta["walk_live"],
-                           meta["walk_len"], meta["near_live"],
-                           interpret=interpret)
+    Hkv = pool_k.shape[-2]
+    if kv_shard_count(mesh, Hkv) == 1:
+        return paged_attention(q, pool_k, pool_v, near_k, near_v,
+                               meta["walk_pid"], meta["walk_live"],
+                               meta["walk_len"], meta["near_live"],
+                               interpret=interpret)
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    B, H, hd = q.shape
+    g = H // Hkv
+
+    def local_stats(q4, pk, pv, nk, nv, w_pid, w_live, w_len, n_live):
+        Hl = pk.shape[-2]                       # this shard's kv heads
+        out, m, l = paged_attention(q4.reshape(B, Hl * g, hd), pk, pv,
+                                    nk, nv, w_pid, w_live, w_len, n_live,
+                                    interpret=interpret)
+        gather = functools.partial(jax.lax.all_gather, axis_name="model",
+                                   axis=1, tiled=True)
+        return (gather(out.reshape(B, Hl, g, hd)).reshape(B, H, hd),
+                gather(m.reshape(B, Hl, g)).reshape(B, H),
+                gather(l.reshape(B, Hl, g)).reshape(B, H))
+
+    head = P(None, "model")                     # dim ndim-2 = Hkv
+    sharded = shard_map(
+        local_stats, mesh=mesh,
+        in_specs=(P(None, "model"), P(None, None, "model"),
+                  P(None, None, "model"), head, head,
+                  P(), P(), P(), P()),
+        out_specs=(P(), P(), P()),
+        check_rep=False)                        # pallas body: no rep tracking
+    return sharded(q.reshape(B, Hkv, g, hd), pool_k, pool_v, near_k, near_v,
+                   meta["walk_pid"], meta["walk_live"], meta["walk_len"],
+                   meta["near_live"])
 
 
 def _paged_attention_kernel(h_ref, walk_pid_ref, walk_live_ref, walk_len_ref,

@@ -36,14 +36,36 @@ def _paged_gather_kernel(ids_ref, pool_ref, o_ref):
 
 def paged_gather(pool: jax.Array, page_ids: jax.Array,
                  interpret: bool = False,
-                 vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET) -> jax.Array:
+                 vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET,
+                 mesh=None) -> jax.Array:
     """pool: (P, page, Hkv, hd); page_ids: (B, n_pages) int32 (< 0 => zeros).
 
     Returns (B, n_pages*page, Hkv, hd): each row b is the contiguous
     materialization of b's page table against the pool.
 
     Raises ValueError when the pool would pin more than
-    ``vmem_budget_bytes`` of VMEM per grid step."""
+    ``vmem_budget_bytes`` of VMEM per grid step.
+
+    With a ``mesh`` whose 'model' axis divides Hkv the pool is
+    KV-HEAD-SHARDED: each device gathers its head slice (a 1/m-size pool
+    shard also means the VMEM budget is priced per SHARD) and a tiled
+    ``all_gather`` over 'model' re-assembles the replicated view — the
+    gather is a pure byte move, so the result is exactly the
+    single-device materialization."""
+    from repro.sharding.specs import kv_shard_count
+    if mesh is not None and kv_shard_count(mesh, pool.shape[-2]) > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P_
+
+        def local_gather(pk, ids):
+            out = paged_gather(pk, ids, interpret=interpret,
+                               vmem_budget_bytes=vmem_budget_bytes)
+            return jax.lax.all_gather(out, "model", axis=2, tiled=True)
+
+        return shard_map(
+            local_gather, mesh=mesh,
+            in_specs=(P_(None, None, "model"), P_()),
+            out_specs=P_(), check_rep=False)(pool, page_ids)
     P, page, Hkv, hd = pool.shape
     B, n_pages = page_ids.shape
     D = Hkv * hd

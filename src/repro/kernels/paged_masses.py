@@ -72,7 +72,7 @@ def _paged_masses_kernel(h_ref, pid_ref, live_ref, len_ref, q_ref,
 
 def paged_masses(q: jax.Array, pool_k: jax.Array, score_pid: jax.Array,
                  score_live: jax.Array, score_len: jax.Array,
-                 interpret: bool = False) -> jax.Array:
+                 interpret: bool = False, mesh=None) -> jax.Array:
     """Pool-native per-page attention masses.
 
     q: (B, H, hd) scoring queries (GQA: H a multiple of Hkv).
@@ -83,7 +83,37 @@ def paged_masses(q: jax.Array, pool_k: jax.Array, score_pid: jax.Array,
     score_len: (B,) int32.
 
     Returns (B, W) f32: per walk entry, softmax attention mass summed over
-    all H heads (entries past score_len are exactly zero)."""
+    all H heads (entries past score_len are exactly zero).
+
+    With a ``mesh`` whose 'model' axis divides Hkv the pool is
+    KV-HEAD-SHARDED: the kernel runs per shard over its head slice (each
+    head's softmax is independent) and the cross-head sum finishes with a
+    ``psum`` over 'model'.  Unlike the read path this output IS a cross-
+    head reduction, so its last bit may differ from the single-device sum
+    order — masses drive page *placement* only, and emitted tokens are
+    placement-invariant (the policy-parity pin)."""
+    from repro.sharding.specs import kv_shard_count
+    if mesh is not None and kv_shard_count(mesh, pool_k.shape[-2]) > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P_
+        B, H, hd = q.shape
+        Hkv = pool_k.shape[-2]
+        g = H // Hkv
+
+        def local_masses(q4, pk, s_pid, s_live, s_len):
+            Hl = pk.shape[-2]
+            out = paged_masses(q4.reshape(B, Hl * g, hd), pk, s_pid, s_live,
+                               s_len, interpret=interpret)
+            return jax.lax.psum(out, "model")
+
+        sharded = shard_map(
+            local_masses, mesh=mesh,
+            in_specs=(P_(None, "model"), P_(None, None, "model"),
+                      P_(), P_(), P_()),
+            out_specs=P_(),
+            check_rep=False)
+        return sharded(q.reshape(B, Hkv, g, hd), pool_k, score_pid,
+                       score_live, score_len)
     B, H, hd = q.shape
     P, page, Hkv, _ = pool_k.shape
     g = H // Hkv

@@ -2,22 +2,72 @@
 
 Defined as functions (never module-level constants) so importing this module
 never touches JAX device state — the dry-run must set XLA_FLAGS before any
-jax initialization.
+jax initialization.  In particular the forced-host CPU multi-device mode
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``) only takes effect
+when the flag is set before the first backend touch, which is how the
+``mesh-4dev`` CI leg and tests/test_mesh_serving.py get a real 4-device
+mesh on a CPU runner.
+
+Axis contract (docs/design.md §2h):
+
+  'data'  : engine replicas — each owns a slot pool + radix prefix cache
+            and serves its share of admissions (scheduler round-robin).
+  'model' : KV-head sharding of the page pool / near buffers — each device
+            walks only its head slice of every mapped page inside
+            ``shard_map``; page tables and walk metadata stay replicated.
 """
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
+from jax.sharding import Mesh
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 = 256 chips per pod (v5e pod); 2 pods = 512 chips multi-pod."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+def _mesh_over(devices, shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
+    n = int(np.prod(shape))
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
 
 
-def make_host_mesh():
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod (v5e pod); 2 pods = 512 chips multi-pod.
+
+    On hosts with fewer devices (CPU runs — including the forced-host
+    multi-device mode) the pod shapes are unbuildable; the old behavior
+    silently degraded to a 1-device mesh, which made nothing mesh-shaped
+    testable.  Now: fall back DETERMINISTICALLY to a ('data','model') mesh
+    over every local device, with the 'model' axis as large as possible
+    (the KV-head shard axis is the one the serving read path exercises)
+    — n devices => shape (1, n)."""
+    devices = jax.devices()
+    n = len(devices)
+    if multi_pod and n >= 512:
+        return _mesh_over(devices, (2, 16, 16), ("pod", "data", "model"))
+    if n >= 256:
+        return _mesh_over(devices, (16, 16), ("data", "model"))
+    return _mesh_over(devices, (1, n), ("data", "model"))
+
+
+def make_test_mesh(n: int | None = None, *, data: int = 1) -> Mesh:
+    """Deterministic ('data','model') mesh over the first ``data * model``
+    local devices — the tests' entry point (model = n // data).
+
+    ``n`` defaults to every local device.  Callers should skip when
+    ``jax.device_count() < n`` (the default CI legs run on 1 device; the
+    ``mesh-4dev`` leg forces 4 via XLA_FLAGS)."""
+    avail = jax.device_count()
+    n = avail if n is None else n
+    if n > avail:
+        raise ValueError(f"make_test_mesh({n}) on a {avail}-device host — "
+                         f"set XLA_FLAGS=--xla_force_host_platform_"
+                         f"device_count={n} before jax initializes")
+    if n % data:
+        raise ValueError(f"device count {n} not divisible by data={data}")
+    return _mesh_over(jax.devices(), (data, n // data), ("data", "model"))
+
+
+def make_host_mesh() -> Mesh:
     """Whatever devices exist locally (tests / examples), as a 1D data mesh."""
     n = len(jax.devices())
     return jax.make_mesh((n,), ("data",))

@@ -39,14 +39,57 @@ def make_paged_tiered_decode_step(arch: ArchConfig, tier_cfg: TieredKVConfig):
     per-step read metadata (`core.tiered_kv.paged_step_metadata`), computed
     ONCE per decode step by the serving engine and shared by every layer.
     Returns (logits, new_cache, aux) with the layer-0 scoring query in
-    ``aux``."""
+    ``aux``.
+
+    ``tier_cfg.mesh`` threads through to the step: pool/near buffers
+    KV-HEAD-SHARDED over the 'model' axis, page tables and walk metadata
+    replicated, emitted tokens bit-identical to single-device
+    (docs/design.md §2h)."""
     fused = bool(tier_cfg.fused_kernel)
+    mesh = tier_cfg.mesh
 
     def decode_step(params, cache, batch, meta):
         return transformer.paged_decode_step(params, cache, batch, arch,
                                              meta, want_aux=True,
-                                             fused=fused)
+                                             fused=fused, mesh=mesh)
     return decode_step
+
+
+def _constrain_pools(pool_k, pool_v, mesh):
+    """Pin the (L, P, page, Hkv, hd) pools to their KV-head sharding after
+    a prefill scatter, so GSPMD does not drift the pool layout to
+    replicated between steps.  The scatter itself indexes only the page
+    dim — exact semantics under the sharding — and no-ops when the mesh is
+    absent or Hkv does not divide the 'model' axis (the GQA/MQA
+    replication fallback)."""
+    from repro.sharding.specs import kv_shard_count
+    if mesh is None or kv_shard_count(mesh, pool_k.shape[-2]) == 1:
+        return pool_k, pool_v
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    ns = NamedSharding(mesh, P(*([None] * (pool_k.ndim - 2)), "model"))
+    return (jax.lax.with_sharding_constraint(pool_k, ns),
+            jax.lax.with_sharding_constraint(pool_v, ns))
+
+
+def _replicated(mesh, *arrays):
+    """Constrain ``arrays`` to fully-replicated under ``mesh``.
+
+    The bit-identity firewall for the prefill factories (docs/design.md
+    §2h): the pool they scatter into is KV-head-sharded, and without a
+    boundary GSPMD back-propagates that sharding into the prefill
+    transformer — the ``wo``/``lm_head`` contractions become per-shard
+    partial sums combined by an all-reduce, whose bf16 rounding differs
+    from the single-device full-dim reduction enough to flip greedy
+    argmax.  Constraining the cache rows (and prefix gathers) to P()
+    right at the scatter/attention boundary keeps the whole prefill
+    compute replicated — bitwise the single-device program — while the
+    scatter itself reshards the exact rows into the pool layout."""
+    if mesh is None:
+        return arrays if len(arrays) > 1 else arrays[0]
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    out = tuple(jax.lax.with_sharding_constraint(
+        a, NamedSharding(mesh, P())) for a in arrays)
+    return out if len(out) > 1 else out[0]
 
 
 def _scatter_prompt_pages(pool_k, pool_v, k_rows, v_rows, ids, page: int):
@@ -65,40 +108,65 @@ def _scatter_prompt_pages(pool_k, pool_v, k_rows, v_rows, ids, page: int):
             pool_v.at[:, safe].set(rv, mode="drop"))
 
 
-def make_pool_prefill_step(arch: ArchConfig, max_len: int, page: int):
+def make_pool_prefill_step(arch: ArchConfig, max_len: int, page: int,
+                           mesh=None):
     """Prefill straight into allocated pool pages (ISSUE 5): one jitted
     program runs ``transformer.prefill`` and scatters the resulting cache
     rows into the per-layer page pool — the dense rows exist only as a
     transient inside the step; the pool is the only store that survives.
-    Returns (logits, pool_k, pool_v)."""
+    Returns (logits, pool_k, pool_v).
+
+    With ``mesh`` set the pools are KV-head-sharded; the prefill compute
+    itself stays fully replicated (``_replicated`` — the bit-identity
+    firewall) and only the exact rows reshard at the scatter."""
+    if mesh is not None:
+        from repro.sharding.specs import kv_shard_count
+        if kv_shard_count(mesh, arch.n_kv_heads) == 1:
+            mesh = None
     def prefill_step(params, batch, pool_k, pool_v, ids):
         logits, pcache = transformer.prefill(params, batch, arch,
                                              max_len=max_len)
+        k_rows, v_rows = pcache["k"][:, 0], pcache["v"][:, 0]
+        if mesh is not None:
+            k_rows, v_rows = _replicated(mesh, k_rows, v_rows)
         pool_k, pool_v = _scatter_prompt_pages(
-            pool_k, pool_v, pcache["k"][:, 0], pcache["v"][:, 0], ids, page)
-        return logits, pool_k, pool_v
+            pool_k, pool_v, k_rows, v_rows, ids, page)
+        return logits, *_constrain_pools(pool_k, pool_v, mesh)
     return prefill_step
 
 
-def make_pool_suffix_prefill_step(arch: ArchConfig, max_len: int, page: int):
+def make_pool_suffix_prefill_step(arch: ArchConfig, max_len: int, page: int,
+                                  mesh=None):
     """Prefix-chunked variant of ``make_pool_prefill_step`` for the
     prefix-sharing admission path: ``batch`` carries only the prompt
     *suffix* (with absolute positions); ``k_pre``/``v_pre`` are the shared
     prefix's K/V pages gathered from the pool ((L, B, T_pre, Hkv, hd)).
     The returned cache rows are bit-identical to a full prefill of
     prefix+suffix (the token-parity property), and land straight in the
-    pool."""
+    pool.  Mesh handling as in ``make_pool_prefill_step`` — the gathered
+    prefix is replicated too, so the suffix attention stays single-device
+    bitwise."""
+    if mesh is not None:
+        from repro.sharding.specs import kv_shard_count
+        if kv_shard_count(mesh, arch.n_kv_heads) == 1:
+            mesh = None
     def prefill_step(params, batch, k_pre, v_pre, pool_k, pool_v, ids):
+        if mesh is not None:
+            k_pre, v_pre = _replicated(mesh, k_pre, v_pre)
         logits, pcache = transformer.prefill(params, batch, arch,
                                              max_len=max_len,
                                              prefix_kv=(k_pre, v_pre))
+        k_rows, v_rows = pcache["k"][:, 0], pcache["v"][:, 0]
+        if mesh is not None:
+            k_rows, v_rows = _replicated(mesh, k_rows, v_rows)
         pool_k, pool_v = _scatter_prompt_pages(
-            pool_k, pool_v, pcache["k"][:, 0], pcache["v"][:, 0], ids, page)
-        return logits, pool_k, pool_v
+            pool_k, pool_v, k_rows, v_rows, ids, page)
+        return logits, *_constrain_pools(pool_k, pool_v, mesh)
     return prefill_step
 
 
-def make_pool_chunk_prefill_step(arch: ArchConfig, max_len: int, page: int):
+def make_pool_chunk_prefill_step(arch: ArchConfig, max_len: int, page: int,
+                                 mesh=None):
     """Chunk-resumable admission prefill (ISSUE 8): one jitted program
     resumes a prompt's prefill from a saved ``(pos, kv-rows-written)``
     cursor ``t_pre`` — it gathers the ``ceil(t_pre/page)`` already-written
@@ -118,7 +186,14 @@ def make_pool_chunk_prefill_step(arch: ArchConfig, max_len: int, page: int):
     holding rows ``[0, t_pre)``; ``ids`` is the full ``(n_pages,)`` scatter
     vector with -1 outside the chunk's pages.  Returns
     (logits, pool_k, pool_v) — logits row ``n-1`` of an S-completing chunk
-    seeds the first decode token."""
+    seeds the first decode token.  Mesh handling as in
+    ``make_pool_prefill_step``: the prefix pages gathered from the sharded
+    pool replicate before the chunk's attention, the chunk compute stays
+    single-device bitwise, and the exact rows reshard at the scatter."""
+    if mesh is not None:
+        from repro.sharding.specs import kv_shard_count
+        if kv_shard_count(mesh, arch.n_kv_heads) == 1:
+            mesh = None
     def chunk_step(params, batch, pool_k, pool_v, prefix_ids, ids,
                    t_pre: int):
         k = pool_k[:, prefix_ids]
@@ -126,12 +201,17 @@ def make_pool_chunk_prefill_step(arch: ArchConfig, max_len: int, page: int):
         k_pre = k.reshape(L, 1, m * page, Hkv, hd)[:, :, :t_pre]
         v_pre = pool_v[:, prefix_ids].reshape(
             L, 1, m * page, Hkv, hd)[:, :, :t_pre]
+        if mesh is not None:
+            k_pre, v_pre = _replicated(mesh, k_pre, v_pre)
         logits, pcache = transformer.prefill(params, batch, arch,
                                              max_len=max_len,
                                              prefix_kv=(k_pre, v_pre))
+        k_rows, v_rows = pcache["k"][:, 0], pcache["v"][:, 0]
+        if mesh is not None:
+            k_rows, v_rows = _replicated(mesh, k_rows, v_rows)
         pool_k, pool_v = _scatter_prompt_pages(
-            pool_k, pool_v, pcache["k"][:, 0], pcache["v"][:, 0], ids, page)
-        return logits, pool_k, pool_v
+            pool_k, pool_v, k_rows, v_rows, ids, page)
+        return logits, *_constrain_pools(pool_k, pool_v, mesh)
     return chunk_step
 
 

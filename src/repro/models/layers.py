@@ -172,7 +172,7 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def paged_decode_attention(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
                            near_k: jax.Array, near_v: jax.Array,
-                           meta: dict) -> jax.Array:
+                           meta: dict, mesh=None) -> jax.Array:
     """Single-token attention through the fused paged tier (ISSUE 4).
 
     The TL-DRAM serving read path: instead of materializing the slot's far
@@ -184,11 +184,15 @@ def paged_decode_attention(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
 
     q: (B,1,H,hd); pool_k/pool_v: (P,page,Hkv,hd); near: (C*page,Hkv,hd).
     Returns (B,1,H,hd), exactly standard attention over the live prefix.
+
+    ``mesh``: KV-head-sharded pool/near buffers — the kernel runs per head
+    shard under ``shard_map`` and the stats come back replicated
+    (bit-identical to single-device; docs/design.md §2h).
     """
     from repro.kernels import ref
     from repro.kernels.paged_attention import paged_attention_stats
     stats = paged_attention_stats(q[:, 0], pool_k, pool_v, near_k, near_v,
-                                  meta)
+                                  meta, mesh=mesh)
     return ref.merge_attention_stats([stats])[:, None].astype(q.dtype)
 
 

@@ -491,7 +491,7 @@ def decode_step(params: Params, cache: Cache, batch: dict, arch: ArchConfig,
 def paged_decode_step(params: Params, cache: Cache, batch: dict,
                       arch: ArchConfig, meta: dict,
                       compute_dtype=jnp.bfloat16, want_aux: bool = False,
-                      fused: bool = True):
+                      fused: bool = True, mesh=None):
     """One decode step over the paged tier — the pool is the ONLY KV store.
 
     Identical math to ``decode_step`` — every layer attends its slot's full
@@ -521,10 +521,28 @@ def paged_decode_step(params: Params, cache: Cache, batch: dict,
     by every layer (lengths = pos + 1 so the token appended this step is
     attended, matching ``decode_attention``'s ``slot <= pos`` mask).
 
+    ``mesh``: pool/near buffers KV-HEAD-SHARDED over the 'model' axis
+    (docs/design.md §2h).  The append scatter indexes only (page, offset)
+    dims, so it partitions under GSPMD with exact semantics; the fused read
+    runs per head shard under ``shard_map`` and hands back replicated
+    stats; the dense read computes per-head stats under GSPMD (head-local
+    math — no collective can reorder it) and the attention output is
+    CONSTRAINED replicated before the wo projection, so the cross-head
+    contraction always reduces the full head dim in single-device order —
+    the bit-identity pin.  Emitted tokens are bit-identical to the
+    single-device step in both modes (tests/test_mesh_serving.py).
+
     Returns (logits, new_cache[, aux]) like ``decode_step``.
     """
     assert arch.n_heads and arch.ssm is None and not arch.sliding_window, \
         "paged decode requires a plain-attention architecture"
+    from repro.sharding.specs import kv_shard_count
+    if mesh is not None and kv_shard_count(mesh, arch.n_kv_heads) == 1:
+        mesh = None                   # GQA/MQA fallback: fully replicated
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P_
+        _pool_ns = NamedSharding(mesh, P_(None, None, "model"))
+        _repl_ns = NamedSharding(mesh, P_())
     x = _embed_inputs(params, batch, arch).astype(compute_dtype)
     x = ctx.constrain(x, ctx.BATCH, ctx.SEQ, None)
     pos = cache["pos"]
@@ -551,9 +569,15 @@ def paged_decode_step(params: Params, cache: Cache, batch: dict,
             pool_v = cl2["pool_v"].at[meta["append_pid"],
                                       meta["append_off"]].set(v[:, 0],
                                                               mode="drop")
+            if mesh is not None:
+                # keep the appended pool head-sharded (the scatter touches
+                # only page/offset dims — GSPMD must not drift the pool to
+                # replicated across steps)
+                pool_k = jax.lax.with_sharding_constraint(pool_k, _pool_ns)
+                pool_v = jax.lax.with_sharding_constraint(pool_v, _pool_ns)
             if fused:
                 out = paged_decode_attention(q, pool_k, pool_v, nk, nv,
-                                             meta)
+                                             meta, mesh=mesh)
             else:
                 n_pages = meta["pt"].shape[1]
                 safe = jnp.maximum(meta["pt"], 0)
@@ -561,6 +585,13 @@ def paged_decode_step(params: Params, cache: Cache, batch: dict,
                 k_view = pool_k[safe].reshape(B, n_pages * page, Hkv, hd)
                 v_view = pool_v[safe].reshape(B, n_pages * page, Hkv, hd)
                 out = decode_attention(q, k_view, v_view, pos)
+                if mesh is not None:
+                    # per-head stats are exact under GSPMD (no op crosses
+                    # heads); replicate them HERE so the wo contraction
+                    # reduces the full head dim in single-device order
+                    # instead of a GSPMD partial-sum psum — the dense
+                    # path's bit-identity pin
+                    out = jax.lax.with_sharding_constraint(out, _repl_ns)
             return out, dict(pool_k=pool_k, pool_v=pool_v)
 
         h = ctx.constrain(h, ctx.BATCH, ctx.SEQ, None)

@@ -1,14 +1,16 @@
 """Continuous-batching tiered-KV serving runtime (docs/design.md §2c–2f)."""
 
-from repro.serve.engine import (ServingConfig, ServingEngine,
-                                sequential_baseline)
-from repro.serve.metrics import CostModel, ServingReport, percentiles
+from repro.serve.engine import (DataParallelEngine, ServingConfig,
+                                ServingEngine, sequential_baseline)
+from repro.serve.metrics import (CostModel, ServingReport,
+                                 merge_lane_reports, percentiles)
 from repro.serve.prefix import PrefixStats, RadixPrefixCache
 from repro.serve.trace import SCENARIOS, Request
 
 __all__ = [
-    "ServingConfig", "ServingEngine", "sequential_baseline",
-    "CostModel", "ServingReport", "percentiles",
+    "DataParallelEngine", "ServingConfig", "ServingEngine",
+    "sequential_baseline",
+    "CostModel", "ServingReport", "merge_lane_reports", "percentiles",
     "PrefixStats", "RadixPrefixCache",
     "SCENARIOS", "Request",
 ]

@@ -95,7 +95,8 @@ from repro.core import tiered_kv as tkv
 from repro.core.tiered_kv import PagePool, TieredKVConfig
 from repro.kernels import ref
 from repro.models import transformer
-from repro.serve.metrics import CostModel, ServingReport
+from repro.serve.metrics import CostModel, ServingReport, merge_lane_reports
+from repro.sharding.specs import cache_specs, kv_shard_count, to_named
 from repro.serve.prefix import RadixPrefixCache
 from repro.serve.trace import Request
 
@@ -184,6 +185,13 @@ class ServingEngine:
         # scoring runs the pool-native mass kernel; the non-fused mode
         # materializes per-layer far views from the SAME pool (the oracle)
         self.fused = bool(tier_cfg.fused_kernel)
+        # mesh-native serving (docs/design.md §2h): with tier.mesh set and
+        # Hkv divisible by the 'model' axis, the pool/near buffers are
+        # KV-head-sharded and every device streams 1/kv_shards of the KV
+        # bytes per decode step (the cost model's kv_shards lane).  The
+        # GQA/MQA fallback (kv_shards == 1) keeps everything replicated.
+        self.mesh = tier_cfg.mesh
+        self.kv_shards = kv_shard_count(self.mesh, arch.n_kv_heads)
         # Pool sizing: worst case (no sharing) every slot maps private
         # pages; the slack keeps retired prompts cached for re-arrivals.
         self.pool_pages = cfg.pool_pages if cfg.pool_pages is not None \
@@ -244,13 +252,16 @@ class ServingEngine:
         # jax.jit caches per input shape, so one wrapper covers every
         # prompt-length bucket (and every matched-prefix length)
         self._prefill = jax.jit(
-            make_pool_prefill_step(arch, cfg.max_len, tier_cfg.page))
+            make_pool_prefill_step(arch, cfg.max_len, tier_cfg.page,
+                                   mesh=self.mesh))
         self._prefill_sfx = jax.jit(
-            make_pool_suffix_prefill_step(arch, cfg.max_len, tier_cfg.page))
+            make_pool_suffix_prefill_step(arch, cfg.max_len, tier_cfg.page,
+                                          mesh=self.mesh))
         # chunk-resumable admission prefill: t_pre (the cursor) is static —
         # it sizes the in-jit prefix slice; jit caches per (t_pre, s_pad)
         self._prefill_chunk = jax.jit(
-            make_pool_chunk_prefill_step(arch, cfg.max_len, tier_cfg.page),
+            make_pool_chunk_prefill_step(arch, cfg.max_len, tier_cfg.page,
+                                         mesh=self.mesh),
             static_argnames=("t_pre",))
         page = tier_cfg.page
 
@@ -699,6 +710,17 @@ class ServingEngine:
                   arch.n_kv_heads, hd)
         self.near_k = jnp.zeros(nshape, dtype)
         self.near_v = jnp.zeros(nshape, dtype)
+        if self.kv_shards > 1:
+            # place the pool/near buffers on their KV-head sharding up
+            # front, so every jitted step consumes and produces the sharded
+            # layout instead of re-sharding on entry
+            kv_tree = {"pool_k": self.pool_k, "pool_v": self.pool_v,
+                       "near_k": self.near_k, "near_v": self.near_v}
+            named = to_named(cache_specs(kv_tree, arch, self.mesh),
+                             self.mesh)
+            placed = jax.device_put(kv_tree, named)
+            self.pool_k, self.pool_v = placed["pool_k"], placed["pool_v"]
+            self.near_k, self.near_v = placed["near_k"], placed["near_v"]
         self.tier = tkv.init_tier_state(cfg.n_slots, self.n_pages,
                                         self.pool_pages, cfg.tier.near_pages)
         self.pool = PagePool(self.pool_pages)
@@ -795,7 +817,8 @@ class ServingEngine:
                 # one fused iteration: decode KV sweep + piggybacked chunk
                 # tokens share the tick's weight stream
                 clock += cfg.cost.decode_step_cost(
-                    self._near_tokens[active_idx], live) \
+                    self._near_tokens[active_idx], live,
+                    kv_shards=self.kv_shards) \
                     + cfg.cost.chunk_prefill_cost(chunk_toks)
                 steps += 1
                 ran_decode = True
@@ -842,6 +865,52 @@ class ServingEngine:
             self.report.prefix_lookups = self.prefix.stats.lookups
             self.report.prefix_hits = self.prefix.stats.hits
         return self.report
+
+
+class DataParallelEngine:
+    """Data-parallel serving over the mesh's 'data' axis (docs/design.md
+    §2h): R engine replicas, each owning its OWN slot pool, page pool, and
+    radix prefix cache, with the offline trace partitioned round-robin by
+    arrival order — request i (in (arrival, rid) order) lands on replica
+    i % R.  Deterministic, so replica outputs are reproducible and the
+    merged report is stable across runs.
+
+    Replicas are *modeled* as parallel: each lane accrues its own byte-cost
+    clock (weights stream independently per replica — that is what data
+    parallelism buys: R weight streams instead of one), and the merged
+    report's ``modeled_time`` is the MAX lane clock.  Host execution is
+    sequential through ONE underlying ``ServingEngine`` (its ``run`` fully
+    re-initializes all mutable state, so the jitted programs compile once
+    and serve every lane) — the model/host split mirrors how the byte-cost
+    clock already abstracts device time everywhere else in the engine.
+
+    Decode tokens are batching-invariant (each emitted token is pinned
+    bit-identical to single-sequence ``greedy_generate``), so the merged
+    ``outputs`` are bit-identical to a single-replica run of the same
+    trace regardless of how admissions split across lanes
+    (tests/test_mesh_serving.py)."""
+
+    def __init__(self, params, arch: ArchConfig, cfg: ServingConfig,
+                 n_replicas: int | None = None):
+        if n_replicas is None:
+            mesh = cfg.tier.mesh
+            n_replicas = mesh.shape.get("data", 1) if mesh is not None else 1
+        assert n_replicas >= 1
+        self.n_replicas = int(n_replicas)
+        self.engine = ServingEngine(params, arch, cfg)
+
+    def run(self, trace: list[Request],
+            scenario: str = "trace") -> ServingReport:
+        R = self.n_replicas
+        order = sorted(trace, key=lambda r: (r.arrival, r.rid))
+        lanes = [order[i::R] for i in range(R)]
+        reports = [self.engine.run(lane, scenario=scenario)
+                   for lane in lanes if lane]
+        if not reports:
+            return ServingReport(scenario=scenario,
+                                 policy=self.engine.cfg.tier.policy,
+                                 n_requests=0)
+        return merge_lane_reports(reports)
 
 
 def sequential_baseline(params, arch: ArchConfig, trace: list[Request],

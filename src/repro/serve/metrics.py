@@ -40,11 +40,18 @@ class CostModel:
     tier: TierCosts = DEFAULT_COSTS
 
     def decode_step_cost(self, near_tokens: np.ndarray,
-                         live_tokens: np.ndarray) -> float:
-        """near_tokens/live_tokens: per-active-slot arrays (near <= live)."""
+                         live_tokens: np.ndarray,
+                         kv_shards: int = 1) -> float:
+        """near_tokens/live_tokens: per-active-slot arrays (near <= live).
+
+        ``kv_shards``: number of devices the KV pool is head-sharded
+        across (docs/design.md §2h).  Each device streams only its
+        1/kv_shards slice of the KV bytes, so the KV term divides; the
+        ``step_overhead`` weight stream does NOT — weights are replicated
+        on every device of the mesh."""
         far = np.maximum(live_tokens - near_tokens, 0)
         kv = (near_tokens * self.tier.near_cost + far * self.tier.far_cost)
-        return float(self.step_overhead + kv.sum())
+        return float(self.step_overhead + kv.sum() / max(int(kv_shards), 1))
 
     def prefill_cost(self, prompt_tokens: int) -> float:
         return self.step_overhead + self.prefill_token_cost * prompt_tokens
@@ -188,3 +195,42 @@ class ServingReport:
               "tok/kcost_modeled", "near_hit_mass", "migrations",
               "p50_lat", "p99_lat", "prefix_hit_rate", "prefill_toks",
               "p50_ttft", "far_rows", "kv_bytes_live", "kv_live_ratio")
+
+
+def merge_lane_reports(lanes: list) -> "ServingReport":
+    """Fold per-replica lane reports into one fleet-level ServingReport.
+
+    Data-parallel serving (docs/design.md §2h) runs R independent engine
+    replicas, each with its own slot pool and modeled byte-cost clock.
+    Counters sum; latency/TTFT samples concatenate (each sample is already
+    on its own lane's clock); peak-byte columns sum (each lane owns
+    distinct HBM); ``modeled_time`` is the MAX lane clock — the fleet is
+    done when its slowest lane is — so ``tokens_per_cost`` reflects the
+    per-device weight stream running R-wide in parallel.
+    """
+    if not lanes:
+        raise ValueError("merge_lane_reports: no lanes")
+    head = lanes[0]
+    merged = ServingReport(
+        scenario=head.scenario, policy=head.policy,
+        n_requests=sum(r.n_requests for r in lanes))
+    for f in ("tokens", "steps", "migrations", "prefill_tokens",
+              "prefill_tokens_full", "prefix_hit_tokens", "prefix_lookups",
+              "prefix_hits", "far_rows_touched", "far_rows_host",
+              "far_rows_dense", "kv_bytes_live", "kv_bytes_near",
+              "kv_bytes_cached", "kv_bytes_dense_equiv", "prefill_chunks",
+              "migration_deferrals"):
+        setattr(merged, f, sum(getattr(r, f) for r in lanes))
+    merged.wall_s = max(r.wall_s for r in lanes)
+    merged.modeled_time = max(r.modeled_time for r in lanes)
+    merged.migration_stall = sum(r.migration_stall for r in lanes)
+    merged.max_read_err = max(r.max_read_err for r in lanes)
+    for r in lanes:
+        merged.token_latencies.extend(r.token_latencies)
+        merged.ttfts.extend(r.ttfts)
+        merged.near_hit_mass.extend(r.near_hit_mass)
+        merged.outputs.update(r.outputs)
+    for i, r in enumerate(lanes):
+        for slot, rids in r.slot_history.items():
+            merged.slot_history[(i, slot)] = rids
+    return merged

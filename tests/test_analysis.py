@@ -195,12 +195,62 @@ class TestPlantedViolations:
         """no-collectives detection on an HLO module with a real collective
         (synthetic text — single-host CPU lowering cannot emit one)."""
         class Fake(AnalysisTarget):
+            def walk(self):
+                return []                 # no jaxpr collectives to excuse it
             def hlo_text(self):
                 return ("ENTRY %e (p0: f32[4]) -> f32[4] {\n"
                         "  ROOT %ar = f32[4] all-reduce(%p0)\n}")
         t = Fake(name="fake", fn=None, args=(), check_collectives=True)
         v = no_collectives(t)
-        assert len(v) == 1 and "all-reduce" in v[0].detail
+        assert len(v) == 1 and v[0].rule == "collective-op" \
+            and "all-reduce" in v[0].detail
+
+    def _rogue_axis_target(self, **kw):
+        """A shard_map collective over a 1-device mesh whose axis name is
+        NOT declared anywhere — runs on any host, no forced devices."""
+        import numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec as P
+
+        mesh = Mesh(np.asarray(jax.devices()[:1]), ("rogue",))
+
+        def stepish(x):
+            return shard_map(lambda xs: jax.lax.psum(xs, "rogue"),
+                             mesh=mesh, in_specs=(P(),), out_specs=P(),
+                             check_rep=False)(x)
+        return _target(stepish, (jnp.ones((4,)),), check_collectives=True,
+                       **kw)
+
+    def test_undeclared_axis_collective_fires(self):
+        """The mesh-sharding escape hatch must not be a blank check: a
+        jaxpr collective over an axis the target has NOT declared is
+        flagged even though the op kind (all-reduce) could be declared
+        for some other axis."""
+        v = no_collectives(self._rogue_axis_target())
+        assert any(x.rule == "collective-axis" and "rogue" in x.detail
+                   for x in v)
+
+    def test_declared_axis_collective_is_clean(self):
+        """The same collective with its axis declared passes both layers:
+        the jaxpr check (axis allowed) and the HLO check (the all-reduce
+        kind is accounted for by the declared psum)."""
+        assert no_collectives(
+            self._rogue_axis_target(allowed_axes=("rogue",))) == []
+
+    def test_allowed_axes_merge_from_baseline_through_runner(self):
+        """run_analysis merges the baseline file's ``allowed_axes`` into
+        targets by name — the declaration is committed config, not a code
+        default."""
+        t = self._rogue_axis_target()
+        rep = run_analysis(mode="dense", targets=[t], with_ownership=False,
+                           baseline={},
+                           allowed_axes={"mini": ["rogue"]})
+        assert rep.ok and t.allowed_axes == ("rogue",)
+        t2 = self._rogue_axis_target()
+        rep2 = run_analysis(mode="dense", targets=[t2],
+                            with_ownership=False, baseline={})
+        assert not rep2.ok and \
+            rep2.active[0].rule == "collective-axis"
 
 
 class TestOwnershipLinter:
@@ -310,7 +360,10 @@ class TestRealStackIsClean:
         assert set(rep["passes_run"]) == {
             "no-dense-far-view", "f32-accumulation", "no-host-sync",
             "vmem-budget", "no-collectives", "pool-ownership"}
-        assert len(rep["targets_run"]) == 8
+        from repro.analysis.targets import kernel_mode
+        want = 8 + (1 if kernel_mode() == "fused" and jax.device_count() > 1
+                    else 0)   # + the mesh-sharded decode step (mesh-4dev CI)
+        assert len(rep["targets_run"]) == want
         assert "chunk_prefill" in rep["targets_run"], \
             "the chunked admission-prefill step must be under analysis"
 

@@ -1,0 +1,263 @@
+"""Mesh-native paged serving (ISSUE 10): KV-head-sharded pool + DP lanes.
+
+The load-bearing property is BIT-IDENTITY: sharding the page pool and near
+buffers by KV head across the mesh's 'model' axis, and partitioning
+admissions across data-parallel engine replicas, must change NO emitted
+token — every per-(slot, kv-head) computation is arithmetically
+independent, the fused walk kernel runs per head shard under ``shard_map``
+with replicated stats gathers, and the prefill factories pin their compute
+replicated so the pool rows are the single-device bytes (docs/design.md
+§2h).
+
+The sharded matrix needs a forced multi-device host
+(``XLA_FLAGS=--xla_force_host_platform_device_count=4`` — the mesh-4dev CI
+leg); the GQA/MQA replication fallback, the data-parallel scheduler, and
+the cost-model lane unit tests run anywhere.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCHS
+from repro.core.tiered_kv import TieredKVConfig
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+from repro.models import transformer
+from repro.serve import ServingConfig, ServingEngine
+from repro.serve.engine import DataParallelEngine
+from repro.serve.metrics import CostModel, ServingReport, merge_lane_reports
+from repro.serve.trace import Request
+from repro.sharding.specs import kv_shard_count
+
+needs4 = pytest.mark.skipif(
+    jax.device_count() < 4,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=4")
+
+# engine read-path modes, as CI names them (REPRO_KERNEL_MODE)
+MODES = {"dense": dict(fused_kernel=False, gather_kernel=False),
+         "gather": dict(fused_kernel=False, gather_kernel=True),
+         "fused": dict(fused_kernel=True, gather_kernel=False)}
+POLICIES = ("SC", "WMC", "BBC", "STATIC")
+
+
+class _FakeMesh:
+    """Shape-only mesh stand-in: ``kv_shard_count`` and the engine's
+    fallback path read nothing but ``mesh.shape``, so divisibility logic
+    is unit-testable without forced devices."""
+
+    def __init__(self, **shape):
+        self.shape = shape
+
+
+@pytest.fixture(scope="module")
+def arch_params():
+    arch = ARCHS["qwen3-1.7b"].reduced()
+    return arch, transformer.init_params(jax.random.key(0), arch)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    rng = np.random.default_rng(7)
+    lens = [20, 12, 20, 12, 20]
+    arrivals = [0, 1, 3, 6, 10]
+    return [Request(rid=i, arrival=arrivals[i],
+                    prompt=rng.integers(0, 2048, lens[i]).astype(np.int32),
+                    max_new_tokens=6)
+            for i in range(5)]
+
+
+def _cfg(mode: str, policy: str, mesh=None) -> ServingConfig:
+    tier = TieredKVConfig(page=16, near_pages=2, interval=3, policy=policy,
+                          mesh=mesh, **MODES[mode])
+    return ServingConfig(n_slots=3, max_len=64, prefill_bucket=16, tier=tier)
+
+
+class TestKvShardCount:
+    def test_no_mesh_and_trivial_axis_are_one(self):
+        assert kv_shard_count(None, 8) == 1
+        assert kv_shard_count(_FakeMesh(data=4, model=1), 8) == 1
+        assert kv_shard_count(_FakeMesh(data=4), 8) == 1
+
+    def test_divisible_heads_shard(self):
+        assert kv_shard_count(_FakeMesh(data=1, model=4), 8) == 4
+        assert kv_shard_count(_FakeMesh(data=2, model=2), 2) == 2
+
+    def test_gqa_mqa_fall_back_to_replication(self):
+        assert kv_shard_count(_FakeMesh(model=4), 2) == 1   # GQA Hkv=2
+        assert kv_shard_count(_FakeMesh(model=4), 1) == 1   # MQA
+        assert kv_shard_count(_FakeMesh(model=3), 8) == 1
+
+
+class TestMeshFactories:
+    def test_make_test_mesh_rejects_oversubscription_with_hint(self):
+        n = jax.device_count() + 1
+        with pytest.raises(ValueError, match="xla_force_host_platform"):
+            make_test_mesh(n)
+
+    def test_make_test_mesh_rejects_bad_data_split(self):
+        with pytest.raises(ValueError):
+            make_test_mesh(1, data=2)
+
+    def test_production_mesh_host_fallback_is_deterministic(self):
+        """Satellite fix: under a forced-host device count the production
+        factory must return a usable (1, n) data/model mesh instead of
+        asserting on pod topology."""
+        m1, m2 = make_production_mesh(), make_production_mesh()
+        assert m1.shape == {"data": 1, "model": jax.device_count()}
+        assert list(m1.devices.flat) == list(m2.devices.flat) \
+            == jax.devices()
+
+    @needs4
+    def test_make_test_mesh_axes_and_order(self):
+        m = make_test_mesh(4, data=2)
+        assert m.shape == {"data": 2, "model": 2}
+        assert list(m.devices.flat) == jax.devices()[:4]
+
+
+@needs4
+class TestShardedBitIdentity:
+    """ISSUE 10 acceptance: emitted tokens bit-identical to single-device
+    across all 4 policies x all kernel modes on a >=4-device forced-host
+    mesh, with the pool genuinely sharded (kv_shards == 2 on the
+    (data=2, model=2) mesh — Hkv=2 divides the model axis)."""
+
+    @pytest.mark.parametrize("policy", POLICIES)
+    @pytest.mark.parametrize("mode", sorted(MODES))
+    def test_tokens_match_single_device(self, arch_params, trace, mode,
+                                        policy):
+        arch, params = arch_params
+        ref = ServingEngine(params, arch, _cfg(mode, policy)).run(
+            trace, "mesh")
+        mesh = make_test_mesh(4, data=2)
+        eng = ServingEngine(params, arch, _cfg(mode, policy, mesh=mesh))
+        assert eng.kv_shards == 2, "mesh must actually shard the KV heads"
+        rep = eng.run(trace, "mesh")
+        assert rep.outputs == ref.outputs, \
+            f"{mode}/{policy}: sharded tokens diverge from single-device"
+        # each device streams half the KV bytes; the weight-stream
+        # overhead is NOT divided, so the clock shrinks but not by 2x
+        assert rep.modeled_time < ref.modeled_time
+        assert rep.tokens == ref.tokens
+
+
+class TestReplicationFallback:
+    """Satellite: Hkv % model-axis != 0 (GQA on a 4-way axis, MQA Hkv=1)
+    must fall back to full replication and stay bit-identical by
+    construction — no shard_map, no constraints, the single-device
+    program."""
+
+    def test_fallback_engine_is_single_device_program(self, arch_params,
+                                                      trace):
+        """Runs on ONE device: a shape-only mesh whose model axis does not
+        divide Hkv=2 must leave every mesh hook dormant."""
+        arch, params = arch_params
+        ref = ServingEngine(params, arch, _cfg("fused", "BBC")).run(
+            trace, "mesh")
+        eng = ServingEngine(
+            params, arch,
+            _cfg("fused", "BBC", mesh=_FakeMesh(data=1, model=4)))
+        assert eng.kv_shards == 1
+        rep = eng.run(trace, "mesh")
+        assert rep.outputs == ref.outputs
+        assert rep.modeled_time == ref.modeled_time   # cost lane unscaled
+
+    @needs4
+    def test_gqa_nondivisible_on_real_mesh(self, arch_params, trace):
+        arch, params = arch_params
+        mesh = make_test_mesh(4)          # model axis 4; Hkv=2 -> fallback
+        ref = ServingEngine(params, arch, _cfg("fused", "SC")).run(
+            trace, "mesh")
+        eng = ServingEngine(params, arch, _cfg("fused", "SC", mesh=mesh))
+        assert eng.kv_shards == 1
+        assert eng.run(trace, "mesh").outputs == ref.outputs
+
+    @needs4
+    def test_mqa_single_kv_head_on_real_mesh(self, trace):
+        arch = dataclasses.replace(ARCHS["qwen3-1.7b"].reduced(),
+                                   n_kv_heads=1)
+        params = transformer.init_params(jax.random.key(1), arch)
+        mesh = make_test_mesh(4, data=2)  # model axis 2; Hkv=1 -> fallback
+        ref = ServingEngine(params, arch, _cfg("fused", "BBC")).run(
+            trace, "mesh")
+        eng = ServingEngine(params, arch, _cfg("fused", "BBC", mesh=mesh))
+        assert eng.kv_shards == 1
+        assert eng.run(trace, "mesh").outputs == ref.outputs
+
+
+class TestDataParallelScheduler:
+    """DP replicas over the 'data' axis: round-robin admission by arrival
+    order, per-lane byte-cost clocks, merged fleet report.  Decode tokens
+    are batching-invariant, so splitting a trace across lanes changes NO
+    token — this runs on one device (lanes are modeled, host-sequential)."""
+
+    def test_outputs_bit_identical_and_deterministic(self, arch_params,
+                                                     trace):
+        arch, params = arch_params
+        cfg = _cfg("fused", "BBC")
+        ref = ServingEngine(params, arch, cfg).run(trace, "dp")
+        dp = DataParallelEngine(params, arch, cfg, n_replicas=4)
+        rep1 = dp.run(trace, "dp")
+        rep2 = dp.run(trace, "dp")
+        assert rep1.outputs == ref.outputs == rep2.outputs
+        assert rep1.tokens == ref.tokens
+        assert rep1.n_requests == len(trace)
+
+    def test_fleet_clock_is_max_lane_and_beats_single_lane(self,
+                                                           arch_params,
+                                                           trace):
+        arch, params = arch_params
+        cfg = _cfg("fused", "BBC")
+        single = ServingEngine(params, arch, cfg).run(trace, "dp")
+        rep = DataParallelEngine(params, arch, cfg, n_replicas=4).run(
+            trace, "dp")
+        # 4 weight streams instead of 1: the fleet finishes earlier on the
+        # modeled clock, so tokens-per-cost rises
+        assert rep.modeled_time < single.modeled_time
+        assert rep.tokens_per_cost > single.tokens_per_cost
+
+    def test_replica_count_comes_from_mesh_data_axis(self, arch_params):
+        arch, params = arch_params
+        cfg = _cfg("fused", "BBC", mesh=_FakeMesh(data=4, model=1))
+        dp = DataParallelEngine(params, arch, cfg)
+        assert dp.n_replicas == 4
+        assert DataParallelEngine(params, arch,
+                                  _cfg("fused", "BBC")).n_replicas == 1
+
+
+class TestCostModelLane:
+    def test_kv_term_divides_overhead_does_not(self):
+        cm = CostModel()
+        near, live = np.asarray([4.0]), np.asarray([10.0])
+        kv = (near * cm.tier.near_cost
+              + (live - near) * cm.tier.far_cost).sum()
+        assert cm.decode_step_cost(near, live) \
+            == pytest.approx(cm.step_overhead + kv)
+        assert cm.decode_step_cost(near, live, kv_shards=2) \
+            == pytest.approx(cm.step_overhead + kv / 2)
+        assert cm.decode_step_cost(near, live, kv_shards=1) \
+            == cm.decode_step_cost(near, live)
+
+    def test_merge_lane_reports_semantics(self):
+        a = ServingReport(scenario="s", policy="BBC", n_requests=2,
+                          tokens=10, steps=5, modeled_time=100.0,
+                          migrations=1, kv_bytes_live=64,
+                          token_latencies=[1.0], ttfts=[2.0],
+                          outputs={0: [1]}, slot_history={0: [0]})
+        b = ServingReport(scenario="s", policy="BBC", n_requests=1,
+                          tokens=4, steps=4, modeled_time=70.0,
+                          migrations=2, kv_bytes_live=32,
+                          token_latencies=[3.0], ttfts=[4.0],
+                          outputs={1: [2]}, slot_history={0: [1]})
+        m = merge_lane_reports([a, b])
+        assert (m.tokens, m.steps, m.migrations) == (14, 9, 3)
+        assert m.n_requests == 3
+        assert m.modeled_time == 100.0            # max lane clock
+        assert m.kv_bytes_live == 96              # lanes own distinct HBM
+        assert sorted(m.token_latencies) == [1.0, 3.0]
+        assert sorted(m.ttfts) == [2.0, 4.0]
+        assert m.outputs == {0: [1], 1: [2]}
+        assert set(m.slot_history) == {(0, 0), (1, 0)}  # lane-namespaced
+        with pytest.raises(ValueError):
+            merge_lane_reports([])
